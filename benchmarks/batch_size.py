@@ -1,0 +1,29 @@
+"""Paper Fig. 5: marginal utility of larger batch sizes at fixed f = 3.
+
+The paper's claim: with larger per-worker batches FA reaches a
+significantly better accuracy than the other robust aggregators.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
+
+
+def run(steps: int = 100, batches=(16, 32, 64, 128),
+        aggs=("flag", "multi_krum", "bulyan", "median")):
+    rows = [("name", "us_per_call", "derived")]
+    for b in batches:
+        for agg in aggs:
+            cfg = ByzRunConfig(f=3, batch=b, aggregator=agg, steps=steps,
+                               attack="random", attack_kw={"scale": 5.0})
+            out = run_byzantine_training(cfg)
+            rows.append((f"batch_size/{agg}/B={b}",
+                         f"{out['us_per_step']:.0f}",
+                         f"acc={out['final_accuracy']:.4f}"))
+            print(rows[-1])
+    emit(rows, "batch_size")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Figs. 2 + 4: tolerance to the number of Byzantine workers.
+
+Sweeps f = 0..3 (random-gradient Byzantine workers, p = 15) across all
+aggregators; reports final test accuracy.  Fig. 2's claim (mean collapses
+for any f >= 1) and Fig. 4's (FA stays highest as f grows) are both read
+off this table.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
+
+AGGS = ["mean", "trimmed_mean", "median", "meamed", "phocas",
+        "multi_krum", "bulyan", "flag"]
+
+
+def run(steps: int = 120, fs=(0, 1, 2, 3), aggs=AGGS):
+    rows = [("name", "us_per_call", "derived")]
+    for f in fs:
+        for agg in aggs:
+            cfg = ByzRunConfig(f=f, aggregator=agg, steps=steps,
+                               attack="random", attack_kw={"scale": 5.0})
+            out = run_byzantine_training(cfg)
+            rows.append((f"byz_tolerance/{agg}/f={f}",
+                         f"{out['us_per_step']:.0f}",
+                         f"acc={out['final_accuracy']:.4f}"))
+            print(rows[-1])
+    emit(rows, "byzantine_tolerance")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Fig. 6a: tolerance to communication loss (10% dropped gradients
+on f=3 links, netem-style), plus Figs. 6b-d: marginal utility of extra
+workers at fixed noise.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
+
+
+def run(steps: int = 100):
+    rows = [("name", "us_per_call", "derived")]
+    # Fig 6a: 10% loss on 3 links
+    for agg in (("flag", "multi_krum", "mean") if steps <= 20 else ("flag", "multi_krum", "bulyan", "mean", "median")):
+        cfg = ByzRunConfig(f=3, aggregator=agg, steps=steps, attack="drop",
+                           attack_kw={"loss_rate": 0.10})
+        out = run_byzantine_training(cfg)
+        rows.append((f"comm_loss/{agg}/drop10", f"{out['us_per_step']:.0f}",
+                     f"acc={out['final_accuracy']:.4f}"))
+        print(rows[-1])
+    # Fig 6b-d: fixed f, growing p
+    for p in ((9, 15) if steps <= 20 else (9, 12, 15, 18)):
+        for agg in ("flag", "multi_krum"):
+            cfg = ByzRunConfig(p=p, f=3, aggregator=agg, steps=steps,
+                               attack="random", attack_kw={"scale": 5.0})
+            out = run_byzantine_training(cfg)
+            rows.append((f"more_workers/{agg}/p={p}",
+                         f"{out['us_per_step']:.0f}",
+                         f"acc={out['final_accuracy']:.4f}"))
+            print(rows[-1])
+    emit(rows, "comm_loss")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

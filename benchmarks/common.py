@@ -1,0 +1,182 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Each benchmark module reproduces one paper table/figure on the synthetic
+image-classification task (the container is offline; see
+data/synthetic.py).  The model is a small CNN (paper's MNIST setup uses
+"two convolutional layers followed by two fully connected layers" — we
+implement exactly that), trained with distributed-simulated workers:
+per-worker minibatch gradients -> attack -> aggregator -> SGD, i.e. the
+same Algorithm-1 pipeline as the pod train step, on one CPU device.
+
+Output convention: every benchmark prints ``name,us_per_call,derived`` CSV
+rows (plus a richer JSON dump under results/bench/).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import FlagConfig, aggregators
+from repro.core.attacks import apply_attack
+from repro.data.synthetic import SyntheticImages
+from repro.data import augment as augment_lib
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+
+
+# ---------------------------------------------------------------------------
+# the paper's small CNN (2 conv + 2 fc)
+# ---------------------------------------------------------------------------
+
+def cnn_init(key, *, channels=3, num_classes=10, width=8):
+    k = jax.random.split(key, 4)
+    init = lambda kk, sh, fan: (jax.random.truncated_normal(kk, -2, 2, sh)
+                                * (fan ** -0.5)).astype(jnp.float32)
+    return {
+        "c1": init(k[0], (3, 3, channels, width), 9 * channels),
+        "c2": init(k[1], (3, 3, width, 2 * width), 9 * width),
+        "f1": init(k[2], (8 * 8 * 2 * width, 64), 8 * 8 * 2 * width),
+        "f2": init(k[3], (64, num_classes), 64),
+        "b1": jnp.zeros((width,)), "b2": jnp.zeros((2 * width,)),
+        "b3": jnp.zeros((64,)), "b4": jnp.zeros((num_classes,)),
+    }
+
+
+def cnn_logits(p, x):
+    """x: (B, 32, 32, ch)."""
+    y = jax.lax.conv_general_dilated(x, p["c1"], (1, 1), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + p["b1"])
+    y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    y = jax.lax.conv_general_dilated(y, p["c2"], (1, 1), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + p["b2"])
+    y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    y = y.reshape(y.shape[0], -1)
+    y = jax.nn.relu(y @ p["f1"] + p["b3"])
+    return y @ p["f2"] + p["b4"]
+
+
+def cnn_loss(p, x, yl):
+    lg = cnn_logits(p, x)
+    return -jnp.mean(jax.nn.log_softmax(lg)[jnp.arange(x.shape[0]), yl])
+
+
+# ---------------------------------------------------------------------------
+# Byzantine training driver
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ByzRunConfig:
+    p: int = 15                        # workers (paper's main setting)
+    f: int = 3                         # Byzantine workers
+    # per-worker batch: the paper uses 128; the CPU-budget default here is
+    # 16 (noted in EXPERIMENTS.md — relative aggregator orderings are
+    # unchanged, and benchmarks/batch_size.py sweeps the batch explicitly).
+    batch: int = 16
+    steps: int = 60
+    lr: float = 0.05
+    momentum: float = 0.9
+    lr_decay: float = 0.2              # paper: x0.2 ...
+    lr_decay_every: int = 40           # ... every 10 epochs (scaled down)
+    attack: str = "random"
+    attack_kw: dict = field(default_factory=dict)
+    aggregator: str = "flag"
+    agg_kw: dict = field(default_factory=dict)
+    flag_cfg: FlagConfig | None = None
+    augment_scheme: str = "none"       # honest-worker augmentation
+    augment_workers: int = 0
+    gaussian_sigma: float = 0.0
+    seed: int = 0
+    eval_every: int = 20
+
+
+def _flatten(tree):
+    return jnp.concatenate([v.ravel() for v in jax.tree.leaves(tree)])
+
+
+def _unflatten_like(tree, vec):
+    leaves, td = jax.tree_util.tree_flatten(tree)
+    out, i = [], 0
+    for leaf in leaves:
+        out.append(vec[i:i + leaf.size].reshape(leaf.shape))
+        i += leaf.size
+    return jax.tree_util.tree_unflatten(td, out)
+
+
+def run_byzantine_training(cfg: ByzRunConfig, task: SyntheticImages | None = None):
+    """Returns dict with accuracy trajectory + final accuracy + timing."""
+    task = task or SyntheticImages(seed=cfg.seed)
+    params = cnn_init(jax.random.PRNGKey(cfg.seed))
+    mom = jnp.zeros_like(_flatten(params))
+    xt, yt = task.test_set(1024)
+
+    # FA-N (renormalized combine weights — beyond-paper, see
+    # EXPERIMENTS.md §Repro): restores the update scale that
+    # Algorithm 1's 1/p reconstruction shrinks.
+    flag_cfg = cfg.flag_cfg or FlagConfig(lam=float(cfg.p), norm_mode="clip",
+                                          renormalize=True)
+    agg_fn = aggregators.get_aggregator(cfg.aggregator)
+    agg_kw = dict(cfg.agg_kw)
+    if cfg.aggregator == "flag":
+        agg_kw.setdefault("cfg", flag_cfg)
+    else:
+        agg_kw.setdefault("f", cfg.f)
+
+    @partial(jax.jit, static_argnames=())
+    def step_fn(params, mom, key, lr):
+        ks = jax.random.split(key, cfg.p + 2)
+        xs, ys = jax.vmap(lambda k: task.sample(k, cfg.batch))(ks[:cfg.p])
+        if cfg.augment_scheme != "none" and cfg.augment_workers > 0:
+            w_idx = jnp.arange(cfg.p)
+            xa = jax.vmap(lambda k, x: augment_lib.augment_batch(
+                k, x, scheme=cfg.augment_scheme,
+                gaussian_sigma=cfg.gaussian_sigma))(ks[:cfg.p], xs)
+            sel = (w_idx >= cfg.f) & (w_idx < cfg.f + cfg.augment_workers)
+            xs = jnp.where(sel[:, None, None, None, None], xa, xs)
+        grads = jax.vmap(lambda x, y: _flatten(jax.grad(cnn_loss)(params, x, y))
+                         )(xs, ys)
+        grads = apply_attack(cfg.attack, grads, ks[-1], cfg.f,
+                             **cfg.attack_kw)
+        d = agg_fn(grads, **agg_kw)
+        mom_n = cfg.momentum * mom + d
+        params_n = jax.tree.map(lambda a, b: a - lr * b, params,
+                                _unflatten_like(params, mom_n))
+        return params_n, mom_n
+
+    @jax.jit
+    def accuracy(params):
+        return jnp.mean(jnp.argmax(cnn_logits(params, xt), -1) == yt)
+
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    traj = []
+    t0 = time.time()
+    for t in range(cfg.steps):
+        lr = cfg.lr * (cfg.lr_decay ** (t // cfg.lr_decay_every))
+        key, k = jax.random.split(key)
+        params, mom = step_fn(params, mom, k, lr)
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.steps - 1:
+            traj.append((t + 1, float(accuracy(params))))
+    wall = time.time() - t0
+    return {"final_accuracy": traj[-1][1], "trajectory": traj,
+            "wall_seconds": wall,
+            "us_per_step": wall / cfg.steps * 1e6}
+
+
+def emit(rows, name):
+    """Print CSV rows + persist JSON."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as fh:
+        json.dump(rows, fh, indent=1, default=float)

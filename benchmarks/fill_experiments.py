@@ -1,0 +1,95 @@
+"""Inject benchmark + dry-run results into EXPERIMENTS.md placeholders."""
+
+from __future__ import annotations
+
+import glob
+import json
+import re
+
+
+def repro_table():
+    rows = []
+    for path in sorted(glob.glob("results/bench/*.json")):
+        with open(path) as f:
+            for r in json.load(f):
+                if isinstance(r, list) and len(r) == 3 and "acc=" in str(r[2]):
+                    rows.append(tuple(r))
+    if not rows:
+        return "*(benchmarks still running — see bench_output.txt)*"
+    lines = ["| benchmark | us/step | result |", "|---|---|---|"]
+    for name, us, derived in rows:
+        lines.append(f"| {name} | {us} | {derived} |")
+    return "\n".join(lines)
+
+
+def dryrun_summary():
+    singles, multis, fails = [], [], []
+    for path in sorted(glob.glob("results/dryrun/*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("variant_tag"):
+            continue
+        if not r.get("ok"):
+            fails.append(f"{r.get('arch')}/{r.get('shape')}/{r.get('mesh')}")
+        elif r["mesh"] == "16x16":
+            singles.append(r)
+        else:
+            multis.append(r)
+    lines = [
+        f"* single-pod (16×16, 256 chips): **{len(singles)}/40 combinations "
+        f"lower + compile OK** (full roofline table below).",
+        f"* multi-pod (2×16×16, 512 chips): **{len(multis)}/40 OK** — the "
+        f"pod axis shards the worker/batch dims; remaining combinations "
+        f"regenerate with the same harness "
+        f"(`--mesh multi`; compile-bound on this 1-core host).",
+    ]
+    if fails:
+        lines.append(f"* failures: {fails}")
+    else:
+        lines.append("* zero lowering/compile failures across all attempted "
+                     "combinations.")
+    done_multi = sorted({(r['arch'], r['shape']) for r in multis})
+    if done_multi:
+        lines.append("* multi-pod combos completed in-session: "
+                     + ", ".join(f"{a}×{s}" for a, s in done_multi) + ".")
+    return "\n".join(lines)
+
+
+def notes():
+    out = []
+    for path in sorted(glob.glob("results/dryrun/*_single.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("ok") or r.get("variant_tag"):
+            continue
+        kinds = r["collectives"]["per_kind_bytes"]
+        if not kinds:
+            continue
+        top = max(kinds.items(), key=lambda kv: kv[1])
+        out.append((r["arch"], r["shape"], top[0], top[1]))
+    agg = {}
+    for arch, shape, kind, b in out:
+        agg.setdefault(kind, []).append((b, f"{arch}/{shape}"))
+    lines = []
+    for kind, items in sorted(agg.items()):
+        items.sort(reverse=True)
+        tops = ", ".join(f"{n} ({b/1e9:.1f}GB)" for b, n in items[:3])
+        lines.append(f"* **{kind}**-heaviest: {tops}")
+    return "\n".join(lines)
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        s = f.read()
+    s = s.replace("<!-- REPRO_TABLE -->", repro_table())
+    s = s.replace("**(table filled from results/bench — see PLACEHOLDER "
+                  "markers)**", "")
+    s = s.replace("<!-- DRYRUN_TABLE -->", dryrun_summary())
+    s = s.replace("<!-- DRYRUN_NOTES -->", notes())
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(s)
+    print("filled EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

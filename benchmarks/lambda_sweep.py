@@ -1,0 +1,60 @@
+"""Paper Figs. 8 + 11: the data-dependent regularizer lambda interpolates
+FA toward Multi-Krum/Bulyan.
+
+p=7, f=1 (paper's Fig. 8 setting, satisfies p >= 4f+3); sweeps lambda and
+reports (a) final accuracy, (b) cosine similarity between FA's aggregate
+and Multi-Krum's on identical gradients (Fig. 11's metric).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import FlagConfig, aggregators
+from repro.core.attacks import apply_attack
+from benchmarks.common import (ByzRunConfig, run_byzantine_training, emit,
+                               cnn_init, cnn_loss, _flatten)
+from repro.data.synthetic import SyntheticImages
+
+
+def cosine_similarity_probe(lam: float, p=7, f=1, probes=16, seed=0):
+    task = SyntheticImages(seed=seed)
+    params = cnn_init(jax.random.PRNGKey(seed))
+    sims = []
+    key = jax.random.PRNGKey(seed + 7)
+    for t in range(probes):
+        key, k = jax.random.split(key)
+        ks = jax.random.split(k, p + 1)
+        grads = []
+        for i in range(p):
+            x, y = task.sample(ks[i], 64)
+            grads.append(_flatten(jax.grad(cnn_loss)(params, x, y)))
+        G = jnp.stack(grads)
+        G = apply_attack("random", G, ks[-1], f, scale=5.0)
+        d_fa = aggregators.flag(G, cfg=FlagConfig(lam=lam, norm_mode="clip"))
+        d_mk = aggregators.multi_krum(G, f=f)
+        sims.append(float(jnp.vdot(d_fa, d_mk)
+                          / (jnp.linalg.norm(d_fa) * jnp.linalg.norm(d_mk)
+                             + 1e-30)))
+    return float(np.mean(sims))
+
+
+def run(steps: int = 100, lams=(0.1, 1.0, 3.0, 7.0, 21.0)):
+    rows = [("name", "us_per_call", "derived")]
+    for lam in lams:
+        cfg = ByzRunConfig(p=7, f=1, aggregator="flag", steps=steps,
+                           attack="random", attack_kw={"scale": 5.0},
+                           flag_cfg=FlagConfig(lam=lam, norm_mode="clip"))
+        out = run_byzantine_training(cfg)
+        cos = cosine_similarity_probe(lam)
+        rows.append((f"lambda/{lam}", f"{out['us_per_step']:.0f}",
+                     f"acc={out['final_accuracy']:.4f};cos_mk={cos:.4f}"))
+        print(rows[-1])
+    emit(rows, "lambda_sweep")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Paper Fig. 12 (appendix E.2): Fall-of-Empires (IPM), 10x sign-flip, and
+the PCA top-m baseline, p=15, f=2."""
+
+from __future__ import annotations
+
+from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
+
+
+def run(steps: int = 100):
+    rows = [("name", "us_per_call", "derived")]
+    for attack, kw in (("ipm", {"eps": 0.1}), ("sign_flip", {"scale": 10.0}),
+                       ("alie", {"z": 1.5})):
+        for agg in (("flag", "pca", "mean") if steps <= 20 else ("flag", "pca", "multi_krum", "bulyan", "mean")):
+            cfg = ByzRunConfig(f=2, aggregator=agg, steps=steps,
+                               attack=attack, attack_kw=kw)
+            out = run_byzantine_training(cfg)
+            rows.append((f"attack/{attack}/{agg}",
+                         f"{out['us_per_step']:.0f}",
+                         f"acc={out['final_accuracy']:.4f}"))
+            print(rows[-1])
+    emit(rows, "other_attacks")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,146 @@
+"""Roofline analysis: three terms per (arch x shape) from the dry-run JSONs.
+
+    compute_s    = FLOPs_per_device / peak_FLOPs_per_chip
+    memory_s     = HBM_bytes_per_device / HBM_bw
+    collective_s = collective_bytes_per_device / ICI_link_bw
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+(The spec's formulas divide global quantities by `chips x peak`; our HLO
+numbers are already per-device — SPMD modules have per-device shapes — so
+we divide by single-chip peaks, which is the same quantity.)
+
+FLOPs and HBM bytes are the **loop-corrected** values from
+benchmarks/hlo_stats.parse_cost (XLA's cost_analysis counts while bodies
+once — both raw and corrected are recorded for transparency).  MODEL_FLOPS
+uses the standard 6*N*D (train) / 2*N*D (inference forward) with N =
+active params (MoE counts top-k + shared).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+      [--mesh 16x16] [--csv out.csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+CHIPS = {"16x16": 256, "pod2x16x16": 512}
+
+
+def model_flops(rec: dict) -> float:
+    """Analytic useful FLOPs per device for the step that was lowered."""
+    n_active = rec.get("active_param_count", 0)
+    chips = CHIPS.get(rec["mesh"], 256)
+    shape = rec["shape"]
+    kind = rec["kind"]
+    tokens = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+              "decode_32k": 128, "long_500k": 1}[shape]
+    per_tok = 6.0 if kind == "train" else 2.0
+    return per_tok * n_active * tokens / chips
+
+
+def load(dirname: str, mesh: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("variant_tag"):
+            continue              # hillclimb variants live in §Perf, not here
+        if not r.get("ok"):
+            recs.append(r)
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def analyze(rec: dict) -> dict:
+    if not rec.get("ok"):
+        return {"arch": rec.get("arch"), "shape": rec.get("shape"),
+                "mesh": rec.get("mesh"), "ok": False,
+                "error": rec.get("error", "")[:120]}
+    flops = rec.get("flops_corrected_per_device") or rec["flops_per_device"]
+    hbm = rec.get("hbm_bytes_corrected_per_device") \
+        or rec["bytes_accessed_per_device"]
+    coll = rec["collectives"]["total_moved_bytes_per_device"]
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(rec)
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "variant": rec.get("variant", ""), "ok": True,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "bound_s": max(t_c, t_m, t_x),
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": mf / flops if flops else 0.0,
+        "peak_gb": rec["memory"]["peak_bytes"] / 1e9,
+        "fits_16gb": rec["memory"]["peak_bytes"] < 16e9,
+    }
+    # one-line "what would move the dominant term down"
+    hints = {
+        "compute": "raise MXU utilization (larger per-step tiles, bf16 "
+                   "throughout) or cut redundant recompute (remat policy)",
+        "memory": "shard the fat dim (ZeRO-1 opt state / bf16 params / "
+                  "KV-cache sharding) and fuse the streaming ops",
+        "collective": "cut TP activation all-reduces (sequence-parallel or "
+                      "batch-over-model for small d_model) and sketch the "
+                      "FA Gram all-gather",
+    }
+    out["hint"] = hints[dom]
+    return out
+
+
+def table(rows, keys=("arch", "shape", "mesh", "variant", "compute_s",
+                      "memory_s", "collective_s", "dominant",
+                      "useful_flops_ratio", "peak_gb")):
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        return str(v)
+    widths = [max(len(k), max((len(fmt(r.get(k, ""))) for r in rows),
+                              default=0)) for k in keys]
+    lines = ["  ".join(k.ljust(w) for k, w in zip(keys, widths))]
+    for r in rows:
+        lines.append("  ".join(fmt(r.get(k, "")).ljust(w)
+                               for k, w in zip(keys, widths)))
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16",
+                    help="roofline mesh (single pod per spec); 'all' for both")
+    ap.add_argument("--csv", default="results/roofline.csv")
+    args = ap.parse_args(argv)
+    recs = load(args.dir, None if args.mesh == "all" else args.mesh)
+    rows = [analyze(r) for r in recs]
+    ok_rows = [r for r in rows if r.get("ok")]
+    print(table(ok_rows))
+    bad = [r for r in rows if not r.get("ok")]
+    for r in bad:
+        print(f"FAILED: {r['arch']} {r['shape']} {r['mesh']}: {r['error']}")
+    if args.csv:
+        os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)
+        keys = list(ok_rows[0].keys()) if ok_rows else []
+        with open(args.csv, "w") as f:
+            f.write(",".join(keys) + "\n")
+            for r in ok_rows:
+                f.write(",".join(str(r.get(k, "")) for k in keys) + "\n")
+        print(f"\nwrote {args.csv} ({len(ok_rows)} rows, {len(bad)} failures)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Fig. 9: scaling out to p = 60 workers (up to f = 14).
+
+The paper demonstrates FA remains feasible at p=60 (their CNN/MNIST
+setup); we run the same-shape CNN on the synthetic task and also record
+the aggregation-call cost at p=60 (q = 60 + 1770 pairwise columns)."""
+
+from __future__ import annotations
+
+from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
+
+
+def run(steps: int = 60):
+    rows = [("name", "us_per_call", "derived")]
+    for p, f in (((30, 7),) if steps <= 10 else ((30, 7), (60, 14))):
+        for agg in (("flag", "mean") if steps <= 10 else ("flag", "multi_krum", "mean")):
+            cfg = ByzRunConfig(p=p, f=f, batch=32, aggregator=agg,
+                               steps=steps, attack="random",
+                               attack_kw={"scale": 5.0})
+            out = run_byzantine_training(cfg)
+            rows.append((f"scale/{agg}/p={p},f={f}",
+                         f"{out['us_per_step']:.0f}",
+                         f"acc={out['final_accuracy']:.4f}"))
+            print(rows[-1])
+    emit(rows, "scalability")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Fig. 10: wall-clock time of the aggregation call itself.
+
+Times each aggregator on realistic gradient-matrix sizes (p=15, n up to
+1M coordinates) — the paper's complexity discussion (Sec. 4) made FA's
+per-iteration cost the headline limitation; the Gram-space form keeps it
+O(n p^2) with a tiny O(q^3) eigh.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import FlagConfig, aggregators
+from benchmarks.common import emit
+
+
+def time_call(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else         jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(p: int = 15, ns=(10_000, 100_000, 1_000_000)):
+    rows = [("name", "us_per_call", "derived")]
+    rng = np.random.default_rng(0)
+    for n in ns:
+        G = jnp.asarray(rng.normal(size=(p, n)).astype(np.float32))
+        for agg in ("mean", "median", "trimmed_mean", "multi_krum",
+                    "bulyan", "flag"):
+            fn = aggregators.get_aggregator(agg)
+            kw = ({"cfg": FlagConfig(lam=float(p))} if agg == "flag"
+                  else {"f": 3})
+            jfn = jax.jit(lambda g: fn(g, **kw))
+            us = time_call(jfn, G)
+            rows.append((f"wallclock/{agg}/n={n}", f"{us:.0f}",
+                         f"p={p}"))
+            print(rows[-1])
+    emit(rows, "wallclock")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,5 @@
+"""Checkpointing: sharded-pytree save/restore (numpy .npz container)."""
+
+from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]

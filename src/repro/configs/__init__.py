@@ -1,0 +1,71 @@
+"""Architecture registry: the 10 assigned configs + the paper's CNN task.
+
+``get_config(arch_id)`` resolves the exact assigned configuration;
+``reduce_for_smoke`` derives the CPU-runnable reduced variant (<=2 layers,
+d_model <= 512, <=4 experts) used by the per-arch smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig, MoESettings
+
+from repro.configs.xlstm_1_3b import CONFIG as _xlstm
+from repro.configs.smollm_360m import CONFIG as _smollm
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.starcoder2_15b import CONFIG as _starcoder2
+from repro.configs.stablelm_1_6b import CONFIG as _stablelm
+from repro.configs.command_r_35b import CONFIG as _command_r
+from repro.configs.deepseek_moe_16b import CONFIG as _deepseek
+from repro.configs.musicgen_medium import CONFIG as _musicgen
+from repro.configs.recurrentgemma_9b import CONFIG as _recurrentgemma
+from repro.configs.phi3_vision_4_2b import CONFIG as _phi3v
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        _xlstm, _smollm, _mixtral, _starcoder2, _stablelm, _command_r,
+        _deepseek, _musicgen, _recurrentgemma, _phi3v,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: 2 layers, d_model<=512, <=4 experts."""
+    kinds_unique = tuple(dict.fromkeys(cfg.layer_kinds()))[:2]
+    pattern = kinds_unique if len(kinds_unique) == 2 else kinds_unique * 2
+    kv = 4 if cfg.num_kv_heads == cfg.num_heads else 2
+    changes = dict(
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=kv,
+        head_dim=64,
+        d_ff=512 if cfg.d_ff > 0 else 0,
+        vocab_size=512,
+        block_pattern=pattern,
+        rglru_width=256 if cfg.rglru_width else 0,
+        window=min(cfg.window, 64) if cfg.window else None,
+        compute_dtype="float32",   # CPU smoke: exact numerics
+    )
+    if cfg.moe is not None:
+        changes["moe"] = MoESettings(
+            num_experts=4, top_k=2, num_shared=min(cfg.moe.num_shared, 1),
+            d_expert=128,
+            # drop-free at smoke scale so decode==prefill exactly; capacity
+            # dropping itself is covered by tests/test_moe.py
+            capacity_factor=4.0)
+        changes["moe_skip_first"] = cfg.moe_skip_first
+        changes["dense_d_ff_first"] = 256 if cfg.moe_skip_first else 0
+        if cfg.moe_skip_first:
+            changes["num_layers"] = 3   # dense head + 2 moe body layers
+    if cfg.frontend is not None:
+        changes["num_prefix_embeds"] = 8
+        changes["d_frontend"] = 32
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **changes)

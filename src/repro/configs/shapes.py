@@ -1,0 +1,70 @@
+"""The four assigned input shapes and their ShapeDtypeStruct input specs."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    return SHAPES[name]
+
+
+def token_batch_specs(cfg: ModelConfig, batch: int, seq: int,
+                      *, with_labels: bool):
+    """ShapeDtypeStruct stand-ins for one model batch (no allocation)."""
+    S_tok = seq - (cfg.num_prefix_embeds if cfg.frontend else 0)
+    spec = {"tokens": jax.ShapeDtypeStruct((batch, S_tok), jnp.int32)}
+    if with_labels:
+        spec["labels"] = jax.ShapeDtypeStruct((batch, S_tok), jnp.int32)
+    if cfg.frontend is not None:
+        spec["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_prefix_embeds, cfg.d_frontend), jnp.bfloat16)
+    return spec
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                workers: int | None = None):
+    """Input ShapeDtypeStructs for (arch x shape).
+
+    train: per-worker batches with a leading worker axis (the FA worker
+    dimension), {tokens, labels[, prefix_embeds]}.
+    prefill: a request batch {tokens[, prefix_embeds]}.
+    decode: one new token per sequence + the decode step counter; the KV /
+    recurrent-state caches are supplied separately (see launch.dryrun).
+    """
+    if shape.kind == "train":
+        assert workers, "training specs need the worker count"
+        assert shape.global_batch % workers == 0
+        per = shape.global_batch // workers
+        leaf = token_batch_specs(cfg, per, shape.seq_len, with_labels=True)
+        return {k: jax.ShapeDtypeStruct((workers,) + v.shape, v.dtype)
+                for k, v in leaf.items()}
+    if shape.kind == "prefill":
+        return token_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                 with_labels=False)
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                               jnp.int32),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,20 @@
+"""Core library: the paper's contribution (Flag Aggregator) + baselines.
+
+Public API:
+  FlagConfig, default_m           — hyper-parameters (paper defaults)
+  flag_aggregate, flag_subspace   — paper-faithful dense IRLS (reference)
+  fa_weights_from_gram,
+  flag_aggregate_gram             — scalable Gram-space FA (TPU-native form)
+  aggregators.AGGREGATORS         — baseline registry (mean..bulyan..flag)
+  attacks.ATTACKS                 — Byzantine threat-model registry
+"""
+
+from repro.core.flag import FlagConfig, default_m, flag_aggregate, flag_subspace
+from repro.core.gram import fa_weights_from_gram, flag_aggregate_gram, gram_matrix
+from repro.core import aggregators, attacks, beta_mle
+
+__all__ = [
+    "FlagConfig", "default_m", "flag_aggregate", "flag_subspace",
+    "fa_weights_from_gram", "flag_aggregate_gram", "gram_matrix",
+    "aggregators", "attacks", "beta_mle",
+]

@@ -1,0 +1,195 @@
+"""Baseline Byzantine-resilient aggregators the paper compares against.
+
+All baselines take a worker-major gradient matrix ``Gw`` of shape ``(p, n)``
+(one row per worker — the layout the distributed runtime produces via
+``vmap(grad)``) and return the aggregated gradient of shape ``(n,)``.
+
+Implemented (paper Sec. 3.1 + appendix E.2):
+  mean, coordinate-wise median, coordinate-wise trimmed mean, MeaMed,
+  Phocas, Krum, Multi-Krum, Bulyan, PCA-top-m (appendix E.2 baseline),
+  geometric median (Weiszfeld), and the Flag Aggregator itself.
+
+Everything is pure ``jax.numpy`` + ``lax`` (jit/vmap/grad-safe, no Python
+control flow on traced values) so the same code runs inside the pjit'd
+train step on a pod and in the CPU benchmarks.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flag import FlagConfig, default_m
+from repro.core.gram import fa_weights_from_gram, gram_matrix
+
+__all__ = [
+    "mean", "median", "trimmed_mean", "meamed", "phocas", "krum",
+    "multi_krum", "bulyan", "pca_topm", "geometric_median", "flag",
+    "get_aggregator", "AGGREGATORS", "pairwise_sq_dists", "krum_scores",
+]
+
+
+# ---------------------------------------------------------------------------
+# coordinate-wise rules
+# ---------------------------------------------------------------------------
+
+def mean(Gw: jnp.ndarray, **_) -> jnp.ndarray:
+    """Non-robust baseline (paper Fig. 2)."""
+    return jnp.mean(Gw, axis=0)
+
+
+def median(Gw: jnp.ndarray, **_) -> jnp.ndarray:
+    """Coordinate-wise median [Yin et al. 2018]."""
+    return jnp.median(Gw, axis=0)
+
+
+def trimmed_mean(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
+    """Coordinate-wise trimmed mean: drop f largest + f smallest per coord."""
+    p = Gw.shape[0]
+    k = min(f, (p - 1) // 2)
+    s = jnp.sort(Gw, axis=0)
+    return jnp.mean(s[k:p - k], axis=0) if k > 0 else jnp.mean(s, axis=0)
+
+
+def _mean_around(Gw: jnp.ndarray, center: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Mean of the k values closest to ``center``, per coordinate."""
+    d = jnp.abs(Gw - center[None, :])
+    # top-k smallest distances per coordinate via sort of (distance, value)
+    order = jnp.argsort(d, axis=0)
+    gathered = jnp.take_along_axis(Gw, order[:k], axis=0)
+    return jnp.mean(gathered, axis=0)
+
+
+def meamed(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
+    """Mean-around-median [Xie et al. 2018]: mean of p-f closest to median."""
+    p = Gw.shape[0]
+    return _mean_around(Gw, jnp.median(Gw, axis=0), max(p - f, 1))
+
+
+def phocas(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
+    """Phocas [Xie et al. 2018]: mean of p-f closest to the trimmed mean."""
+    p = Gw.shape[0]
+    return _mean_around(Gw, trimmed_mean(Gw, f=f), max(p - f, 1))
+
+
+# ---------------------------------------------------------------------------
+# distance-based rules (Gram-computable: scalable on the pod)
+# ---------------------------------------------------------------------------
+
+def pairwise_sq_dists(Gw: jnp.ndarray) -> jnp.ndarray:
+    """(p, p) squared distances from the Gram matrix (single O(n p^2) pass)."""
+    K = gram_matrix(Gw.T)
+    dg = jnp.diag(K)
+    return jnp.clip(dg[:, None] + dg[None, :] - 2.0 * K, 0.0)
+
+
+def krum_scores(D2: jnp.ndarray, f: int) -> jnp.ndarray:
+    """Krum score per worker: sum of its p-f-2 smallest distances to others."""
+    p = D2.shape[0]
+    k = max(p - f - 2, 1)
+    # exclude self-distance by pushing the diagonal to +inf
+    D2 = D2 + jnp.diag(jnp.full((p,), jnp.inf, D2.dtype))
+    neg_small, _ = jax.lax.top_k(-D2, k)           # k smallest per row
+    return -jnp.sum(neg_small, axis=1)
+
+
+def krum(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
+    """Krum [Blanchard et al. 2017]: the single lowest-score gradient."""
+    s = krum_scores(pairwise_sq_dists(Gw), f)
+    return Gw[jnp.argmin(s)]
+
+
+def multi_krum(Gw: jnp.ndarray, *, f: int = 1, q: int | None = None, **_):
+    """Multi-Krum: average the q = p - f - 2 lowest-score gradients."""
+    p = Gw.shape[0]
+    q = q if q is not None else max(p - f - 2, 1)
+    s = krum_scores(pairwise_sq_dists(Gw), f)
+    _, idx = jax.lax.top_k(-s, q)
+    return jnp.mean(Gw[idx], axis=0)
+
+
+def bulyan(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
+    """Bulyan [El Mhamdi et al. 2018]: recursive Multi-Krum selection of
+    theta = p - 2f gradients, then per-coordinate mean of the beta =
+    theta - 2f values closest to the median (strong resilience needs
+    p >= 4f + 3)."""
+    p = Gw.shape[0]
+    theta = max(p - 2 * f, 1)
+    beta = max(theta - 2 * f, 1)
+
+    D2_all = pairwise_sq_dists(Gw)
+    # Masked-out distances must dominate every real distance, but stay small
+    # enough that  (count_masked * big + real_part)  still resolves real_part
+    # in fp32 — each selection round includes the same number of masked
+    # entries per row, so ordering is then decided by the real part.
+    big = 4.0 * jnp.max(D2_all) + 1.0
+
+    def select_one(carry, _):
+        mask = carry                                   # True = still available
+        # mask out already-selected workers from both axes
+        D2 = jnp.where(mask[:, None] & mask[None, :], D2_all, big)
+        s = krum_scores(D2, f)
+        s = jnp.where(mask, s, jnp.inf)
+        pick = jnp.argmin(s)
+        return mask.at[pick].set(False), pick
+
+    avail = jnp.ones((p,), bool)
+    _, picks = jax.lax.scan(select_one, avail, None, length=theta)
+    S = Gw[picks]                                      # (theta, n)
+    return _mean_around(S, jnp.median(S, axis=0), beta)
+
+
+# ---------------------------------------------------------------------------
+# subspace rules
+# ---------------------------------------------------------------------------
+
+def pca_topm(Gw: jnp.ndarray, *, m: int | None = None, **_) -> jnp.ndarray:
+    """Appendix E.2 baseline: one unweighted FA step == PCA reconstruction.
+
+    d = (1/p) Y Y^T G 1 with Y = top-m principal directions of the
+    normalized gradient columns (single SVD, no IRLS, no regularizer).
+    """
+    cfg = FlagConfig(m=m, lam=0.0, regularizer="none", n_iter=1)
+    c, _ = fa_weights_from_gram(gram_matrix(Gw.T), cfg)
+    return Gw.T @ c.astype(Gw.dtype)
+
+
+def flag(Gw: jnp.ndarray, *, cfg: FlagConfig = FlagConfig(), **_) -> jnp.ndarray:
+    """The paper's Flag Aggregator (Gram-space solver)."""
+    c, _ = fa_weights_from_gram(gram_matrix(Gw.T), cfg)
+    return Gw.T @ c.astype(Gw.dtype)
+
+
+def geometric_median(Gw: jnp.ndarray, *, n_iter: int = 8, eps: float = 1e-8, **_):
+    """Weiszfeld iterations (extra baseline, not in the paper's table)."""
+    def body(z, _):
+        w = jax.lax.rsqrt(jnp.clip(jnp.sum((Gw - z[None, :]) ** 2, axis=1), eps))
+        return jnp.sum(Gw * w[:, None], axis=0) / jnp.sum(w), None
+    z0 = jnp.mean(Gw, axis=0)
+    z, _ = jax.lax.scan(body, z0, None, length=n_iter)
+    return z
+
+
+AGGREGATORS: dict[str, Callable] = {
+    "mean": mean,
+    "median": median,
+    "trimmed_mean": trimmed_mean,
+    "meamed": meamed,
+    "phocas": phocas,
+    "krum": krum,
+    "multi_krum": multi_krum,
+    "bulyan": bulyan,
+    "pca": pca_topm,
+    "geomed": geometric_median,
+    "flag": flag,
+}
+
+
+def get_aggregator(name: str) -> Callable:
+    try:
+        return AGGREGATORS[name]
+    except KeyError:
+        raise KeyError(f"unknown aggregator {name!r}; have {sorted(AGGREGATORS)}")

@@ -1,0 +1,130 @@
+"""Byzantine attack library (the paper's threat models, Sec. 3.1 + App. E.2).
+
+Attacks transform a worker-major honest gradient matrix ``Gw (p, n)`` into
+the matrix actually "received": the first ``f`` workers are Byzantine (which
+workers are Byzantine is irrelevant to permutation-invariant aggregators;
+tests cover shuffled placement too).  Everything is a pure function of
+``(Gw, rng, f)`` so the simulation is deterministic and jit-safe, and can run
+*inside* the distributed train step (each worker knows its index).
+
+Implemented threat models:
+  random      — uniformly random gradients (paper Figs. 2/4/9: "Byzantine
+                workers send random gradients")
+  gaussian    — N(0, sigma^2) gradients
+  sign_flip   — 10x amplified sign-flipped gradients (App. E.2, Fig. 12b)
+  zero        — send zeros (a degenerate failure)
+  drop        — 10% of packet coordinates dropped/zeroed (Fig. 6a netem loss)
+  ipm         — Fall of Empires inner-product manipulation (Fig. 12a):
+                byz gradient = -eps * mean(honest)
+  alie        — A Little Is Enough: mean + z * std of honest gradients
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["apply_attack", "ATTACKS", "byzantine_mask"]
+
+
+def byzantine_mask(p: int, f: int) -> jnp.ndarray:
+    """Boolean (p,) mask, True for Byzantine workers (the first f)."""
+    return jnp.arange(p) < f
+
+
+def _bmask(mask: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast the worker mask against an arbitrary-rank leaf (W, ...)."""
+    return mask.reshape(mask.shape + (1,) * (g.ndim - 1))
+
+
+def _honest_stats(Gw: jnp.ndarray, mask: jnp.ndarray):
+    """Mean/std over honest workers only (what omniscient attackers use)."""
+    w = _bmask(~mask, Gw).astype(Gw.dtype)
+    denom = jnp.maximum(jnp.sum(w, axis=0), 1.0)
+    mu = jnp.sum(Gw * w, axis=0) / denom
+    var = jnp.sum(w * (Gw - mu[None]) ** 2, axis=0) / denom
+    return mu, jnp.sqrt(var)
+
+
+def _random(Gw, rng, mask, *, scale: float = 1.0):
+    scale = scale * jnp.max(jnp.abs(Gw))
+    noise = jax.random.uniform(rng, Gw.shape, Gw.dtype, -1.0, 1.0) * scale
+    return jnp.where(_bmask(mask, Gw), noise, Gw)
+
+
+def _gaussian(Gw, rng, mask, *, sigma: float = 1.0):
+    sigma = sigma * jnp.std(Gw)
+    noise = jax.random.normal(rng, Gw.shape, Gw.dtype) * sigma
+    return jnp.where(_bmask(mask, Gw), noise, Gw)
+
+
+def _sign_flip(Gw, rng, mask, *, scale: float = 10.0):
+    del rng
+    return jnp.where(_bmask(mask, Gw), -scale * Gw, Gw)
+
+
+def _zero(Gw, rng, mask):
+    del rng
+    return jnp.where(_bmask(mask, Gw), jnp.zeros_like(Gw), Gw)
+
+
+def _drop(Gw, rng, mask, *, loss_rate: float = 0.10):
+    """Communication loss: each Byzantine link drops loss_rate of coords."""
+    keep = jax.random.bernoulli(rng, 1.0 - loss_rate, Gw.shape)
+    dropped = jnp.where(keep, Gw, 0.0)
+    return jnp.where(_bmask(mask, Gw), dropped, Gw)
+
+
+def _ipm(Gw, rng, mask, *, eps: float = 0.1):
+    """Fall of Empires [Xie et al. 2020] with the paper's eps = 0.1."""
+    del rng
+    mu, _ = _honest_stats(Gw, mask)
+    return jnp.where(_bmask(mask, Gw), -eps * mu[None], Gw)
+
+
+def _alie(Gw, rng, mask, *, z: float = 1.5):
+    """A Little Is Enough [Baruch et al. 2019]."""
+    del rng
+    mu, sd = _honest_stats(Gw, mask)
+    return jnp.where(_bmask(mask, Gw), (mu - z * sd)[None], Gw)
+
+
+def _none(Gw, rng, mask):
+    del rng, mask
+    return Gw
+
+
+ATTACKS: dict[str, Callable] = {
+    "none": _none,
+    "random": _random,
+    "gaussian": _gaussian,
+    "sign_flip": _sign_flip,
+    "zero": _zero,
+    "drop": _drop,
+    "ipm": _ipm,
+    "alie": _alie,
+}
+
+
+def apply_attack(name: str, Gw: jnp.ndarray, rng: jax.Array, f: int, **kw):
+    """Apply attack ``name`` with ``f`` Byzantine workers to ``Gw (p, ...)``."""
+    if name not in ATTACKS:
+        raise KeyError(f"unknown attack {name!r}; have {sorted(ATTACKS)}")
+    mask = byzantine_mask(Gw.shape[0], f)
+    return ATTACKS[name](Gw, rng, mask, **kw)
+
+
+def apply_attack_tree(name: str, grads_w, rng: jax.Array, f: int, **kw):
+    """Per-leaf attack on a worker-major gradient pytree (W, ...) leaves.
+
+    The same Byzantine worker set corrupts every leaf; rng is folded per
+    leaf so random attacks differ across tensors but stay deterministic."""
+    if name not in ATTACKS:
+        raise KeyError(f"unknown attack {name!r}; have {sorted(ATTACKS)}")
+    leaves, treedef = jax.tree_util.tree_flatten(grads_w)
+    mask = byzantine_mask(leaves[0].shape[0], f)
+    out = [ATTACKS[name](leaf, jax.random.fold_in(rng, i), mask, **kw)
+           for i, leaf in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)

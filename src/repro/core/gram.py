@@ -1,0 +1,168 @@
+"""Gram-space Flag Aggregator — the scalable, TPU-native form of FA.
+
+The paper's Algorithm 1 runs IRLS with an ``n x p`` SVD per iteration at a
+parameter server (complexity O(n * N_delta * (sum_i k_i)^2), their Sec. 4
+limitation).  On a pod there is no parameter server and n ~ 1e9, so we
+re-derive the whole procedure in terms of the p x p Gram matrix K = G^T G.
+
+Derivation
+----------
+Let nu = sqrt(diag K) (worker gradient norms), Kt = K / (nu nu^T) the Gram of
+the *normalized* gradients G~.  Every column FA ever decomposes — the data
+columns g~_i and the pairwise-regularizer columns d~_ij — is a fixed linear
+combination of columns of G~:
+
+    M = G~ A,       A in R^{p x q},  q = p + p(p-1)/2,
+    A[:, i] = e_i,  A[:, (i,j)] = (e_i - e_j) / D~_ij,
+    D~_ij   = ||g~_i - g~_j|| = sqrt(2 - 2 Kt_ij).
+
+The IRLS weighted-PCA step needs the top-m left-singular subspace Y of
+M_w = M diag(sqrt(u)).  With the q x q PSD matrix
+
+    S_w = diag(sqrt(u)) (A^T Kt A) diag(sqrt(u)) = V L V^T   (eigh),
+
+we have Y = M_w V_m L_m^{-1/2} (orthonormal by construction), and every
+quantity FA needs is Gram-computable:
+
+  * explained variance of column c:
+        v_c = || L_m^{-1/2} V_m^T diag(sqrt(u)) S[:, c] ||^2
+  * aggregation update (Algorithm 1, line 6):
+        d = (1/p) Y Y^T G 1 = G c,
+        c = (1/p) diag(1/nu) W nu,
+        W = A diag(sqrt(u)) V_m L_m^{-1} V_m^T diag(sqrt(u)) A^T Kt.
+
+So the only n-dependent work is forming K (one tall-skinny matmul — a psum
+over model shards in the distributed runtime, a Pallas kernel on TPU) and
+the final weighted combine G c (a weighted all-reduce).  The q^3 eigh is
+replicated on every device: q <= 528 even for p = 32 workers.
+
+Equivalence with the dense reference (:mod:`repro.core.flag`) is asserted to
+~1e-5 in ``tests/test_gram.py``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import beta_mle
+from repro.core.flag import FlagConfig, default_m, effective_norms
+
+__all__ = ["fa_weights_from_gram", "flag_aggregate_gram", "gram_matrix"]
+
+
+def gram_matrix(G: jnp.ndarray) -> jnp.ndarray:
+    """K = G^T G in fp32 (the accumulator dtype the Pallas kernel uses)."""
+    Gf = G.astype(jnp.float32)
+    return Gf.T @ Gf
+
+
+def _mixing(K: jnp.ndarray, cfg: FlagConfig, eps: float):
+    """Normalized Gram Kt, mixing matrix A, and per-column coefficients."""
+    p = K.shape[0]
+    nu = jnp.sqrt(jnp.clip(jnp.diag(K), eps))
+    Kt = K / (nu[:, None] * nu[None, :])
+    # exact unit diagonal (guards eigh conditioning):
+    Kt = Kt - jnp.diag(jnp.diag(Kt)) + jnp.eye(p, dtype=K.dtype)
+    eye = jnp.eye(p, dtype=K.dtype)
+    if cfg.regularizer == "pairwise" and cfg.lam > 0.0 and p > 1:
+        ii, jj = jnp.triu_indices(p, k=1)
+        d2 = jnp.clip(2.0 - 2.0 * Kt[ii, jj], 0.0)
+        inv_d = jnp.where(d2 > 1e-12, jax.lax.rsqrt(jnp.maximum(d2, 1e-12)), 0.0)
+        Apairs = (eye[:, ii] - eye[:, jj]) * inv_d[None, :]   # (p, npairs)
+        A = jnp.concatenate([eye, Apairs], axis=1)
+        coef = jnp.concatenate(
+            [jnp.ones((p,), K.dtype),
+             jnp.full((ii.shape[0],), cfg.lam / (p - 1), K.dtype)])
+    else:
+        A = eye
+        coef = jnp.ones((p,), K.dtype)
+    return Kt, nu, A, coef
+
+
+def _safe_inv(lam: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Pseudo-inverse of eigenvalues (rank-deficient Grams are expected)."""
+    return jnp.where(lam > eps, 1.0 / jnp.maximum(lam, eps), 0.0)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def fa_weights_from_gram(K: jnp.ndarray, cfg: FlagConfig = FlagConfig()):
+    """FA combination weights c from the Gram matrix only.
+
+    Args:
+      K: (p, p) Gram of raw worker gradients, K_ij = g_i . g_j  (fp32).
+    Returns:
+      (c, aux): c (p,) with  d = G @ c  reproducing Algorithm 1's update;
+      aux holds per-worker explained variance, IRLS iterations, objective.
+    """
+    K = K.astype(jnp.float32)
+    p = K.shape[0]
+    m = cfg.m if cfg.m is not None else default_m(p)
+    eps = cfg.eps
+    Kt, nu, A, coef = _mixing(K, cfg, eps)
+    S = A.T @ Kt @ A                       # (q, q), Gram of unit columns
+    q = S.shape[0]
+
+    def eig_top_m(u):
+        su = jnp.sqrt(u)
+        Sw = S * (su[:, None] * su[None, :])
+        lam, V = jnp.linalg.eigh(Sw)       # ascending
+        return lam[-m:], V[:, -m:], su
+
+    def explained(lam_m, Vm, su):
+        # v_c = || L^{-1/2} Vm^T diag(su) S[:,c] ||^2
+        Z = (Vm * jnp.sqrt(_safe_inv(lam_m, eps))[None, :]).T @ (su[:, None] * S)
+        return jnp.clip(jnp.sum(Z * Z, axis=0), 0.0, 1.0)
+
+    u0 = coef
+    lam0, V0, su0 = eig_top_m(u0)
+
+    def cond(state):
+        it, done, *_ = state
+        return jnp.logical_and(it < cfg.n_iter, jnp.logical_not(done))
+
+    def body(state):
+        it, _, u, lam_m, Vm, su = state
+        v = explained(lam_m, Vm, su)
+        u_new = beta_mle.irls_weights(v, coef, alpha=cfg.alpha, beta=cfg.beta,
+                                      a=cfg.a, eps=eps)
+        lam_n, Vn, su_n = eig_top_m(u_new)
+        # chordal distance between successive subspaces, in Gram space:
+        #   Y^T Y' = L^{-1/2} V^T diag(su) S diag(su') V' L'^{-1/2}
+        C = (Vm * jnp.sqrt(_safe_inv(lam_m, eps))[None, :]).T \
+            @ (su[:, None] * S * su_n[None, :]) \
+            @ (Vn * jnp.sqrt(_safe_inv(lam_n, eps))[None, :])
+        c2 = 2.0 * (m - jnp.sum(C * C))
+        return (it + 1, c2 < cfg.tol, u_new, lam_n, Vn, su_n)
+
+    it, _, u, lam_m, Vm, su = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0), jnp.asarray(False), u0, lam0, V0, su0))
+
+    # Final combine:  W = A diag(su) Vm L^{-1} Vm^T diag(su) A^T Kt
+    B = A * su[None, :]                    # (p, q) = A diag(su)
+    P = (Vm * _safe_inv(lam_m, eps)[None, :]) @ Vm.T   # (q, q)
+    W = B @ P @ (B.T @ Kt)                 # (p, p)
+    nu_eff = effective_norms(nu, cfg.norm_mode)
+    c = (W @ nu_eff) / (nu * p)
+    if cfg.renormalize:  # FA-N (see FlagConfig)
+        c = c / jnp.maximum(jnp.abs(jnp.sum(c)), 1e-6)
+
+    v = explained(lam_m, Vm, su)
+    aux = {
+        "explained_variance": v[:p],
+        "objective": jnp.sum(coef * beta_mle.beta_nll_terms(
+            v, alpha=cfg.alpha, beta=cfg.beta, a=cfg.a, eps=eps)),
+        "iterations": it,
+        "weights": c,
+        "m": m,
+    }
+    return c, aux
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def flag_aggregate_gram(G: jnp.ndarray, cfg: FlagConfig = FlagConfig()):
+    """Single-host convenience: d = G @ fa_weights_from_gram(G^T G)."""
+    c, aux = fa_weights_from_gram(gram_matrix(G), cfg)
+    return G @ c.astype(G.dtype), aux

@@ -1,0 +1,118 @@
+"""Nonlinear data augmentations from the paper (Sec. 3.1 "Evaluating
+resilience against nonlinear data augmentation").
+
+The paper induces *dependent* (non-i.i.d.) Byzantine-style noise by
+augmenting training images with numerically-solved nonlinear systems:
+
+* **Lotka-Volterra**:  (x, y) -> (alpha x - beta x y,  delta x y - gamma y)
+  with (alpha, beta, gamma, delta) = (2/3, 4/3, -1, -1); the paper
+  integrates with SciPy's LSODA.  We integrate the same vector field with
+  fixed-step RK4 in pure JAX (deterministic, jit/vmap-safe, offline) on
+  channel pairs of the image treated as the (x, y) state.
+* **Arnold's Cat Map**:  (x, y) -> ((2x + y) mod N, (x + y) mod N) on pixel
+  coordinates — an area-preserving chaotic shuffle, plus the paper's
+  *smooth* approximation with the sigmoid-approximated mod (their m = 0.95),
+  implemented with bilinear resampling.
+
+Plus the paper's "varying level of Gaussian noise" added on top.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+LV_PARAMS = (2.0 / 3.0, 4.0 / 3.0, -1.0, -1.0)   # alpha, beta, gamma, delta
+
+
+def _lv_field(state, params=LV_PARAMS):
+    alpha, beta, gamma, delta = params
+    x, y = state
+    return (alpha * x - beta * x * y, delta * x * y - gamma * y)
+
+
+def rk4(field, state, dt: float, steps: int):
+    """Fixed-step RK4 integrator for a pytree state."""
+    def one(state, _):
+        k1 = field(state)
+        k2 = field(jax.tree.map(lambda s, k: s + 0.5 * dt * k, state, k1))
+        k3 = field(jax.tree.map(lambda s, k: s + 0.5 * dt * k, state, k2))
+        k4 = field(jax.tree.map(lambda s, k: s + dt * k, state, k3))
+        new = jax.tree.map(
+            lambda s, a, b, c, d: s + dt / 6.0 * (a + 2 * b + 2 * c + d),
+            state, k1, k2, k3, k4)
+        return new, None
+    out, _ = jax.lax.scan(one, state, None, length=steps)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def lotka_volterra(images: jnp.ndarray, *, t: float = 1.0, steps: int = 16):
+    """images: (..., H, W, ch) in [0,1].  Channel pairs (0,1) evolve under
+    the LV flow; odd trailing channel left unchanged."""
+    ch = images.shape[-1]
+    npair = ch // 2
+    x = images[..., 0:2 * npair:2] + 0.5      # keep state away from 0
+    y = images[..., 1:2 * npair:2] + 0.5
+    xs, ys = rk4(_lv_field, (x, y), t / steps, steps)
+    out = jnp.stack([xs - 0.5, ys - 0.5], axis=-1)
+    out = out.reshape(*images.shape[:-1], 2 * npair)
+    if ch % 2:
+        out = jnp.concatenate([out, images[..., -1:]], axis=-1)
+    return jnp.clip(out, 0.0, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("iterations",))
+def cat_map(images: jnp.ndarray, *, iterations: int = 1):
+    """Exact Arnold cat map on pixel coordinates (square images)."""
+    H, W = images.shape[-3], images.shape[-2]
+    assert H == W, "cat map needs square images"
+    yy, xx = jnp.mgrid[0:H, 0:W]
+    for _ in range(iterations):
+        xx, yy = (2 * xx + yy) % W, (xx + yy) % H
+    return images[..., yy, xx, :]
+
+
+def _bilinear(img, xf, yf):
+    """img: (H, W, ch); xf/yf: (H, W) float sample coords."""
+    H, W = img.shape[0], img.shape[1]
+    x0 = jnp.clip(jnp.floor(xf).astype(jnp.int32), 0, W - 1)
+    y0 = jnp.clip(jnp.floor(yf).astype(jnp.int32), 0, H - 1)
+    x1, y1 = jnp.minimum(x0 + 1, W - 1), jnp.minimum(y0 + 1, H - 1)
+    wx = (xf - x0)[..., None]
+    wy = (yf - y0)[..., None]
+    return ((1 - wy) * ((1 - wx) * img[y0, x0] + wx * img[y0, x1])
+            + wy * ((1 - wx) * img[y1, x0] + wx * img[y1, x1]))
+
+
+@jax.jit
+def smooth_cat_map(images: jnp.ndarray, *, m: float = 0.95):
+    """Paper's smooth approximation: mod replaced by the sigmoid form
+    1/(1 + exp(-m log(a)))."""
+    H, W = images.shape[-3], images.shape[-2]
+    yy, xx = jnp.mgrid[0:H, 0:W]
+    a1 = (2 * xx + yy).astype(jnp.float32) / W + 1e-6
+    a2 = (xx + yy).astype(jnp.float32) / H + 1e-6
+    sx = W * jax.nn.sigmoid(m * jnp.log(a1))
+    sy = H * jax.nn.sigmoid(m * jnp.log(a2))
+    fn = lambda img: _bilinear(img, sx, sy)
+    for _ in range(images.ndim - 3):
+        fn = jax.vmap(fn)
+    return fn(images)
+
+
+def augment_batch(key, images, *, scheme: str, gaussian_sigma: float = 0.05):
+    """Apply ``scheme`` + Gaussian noise (paper's combined setting)."""
+    if scheme == "lotka_volterra":
+        images = lotka_volterra(images)
+    elif scheme == "cat_map":
+        images = cat_map(images)
+    elif scheme == "smooth_cat_map":
+        images = smooth_cat_map(images)
+    elif scheme != "none":
+        raise ValueError(f"unknown augmentation {scheme!r}")
+    if gaussian_sigma:
+        images = images + gaussian_sigma * jax.random.normal(key, images.shape)
+    return jnp.clip(images, 0.0, 1.0)

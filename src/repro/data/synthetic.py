@@ -1,0 +1,110 @@
+"""Deterministic synthetic datasets (the container is offline — no CIFAR).
+
+Two task families:
+
+* **SyntheticImages** — a CIFAR-10-shaped stand-in for the paper's accuracy
+  experiments: C class templates built from low-frequency Fourier patterns
+  plus per-sample Gaussian pixel noise.  Relative aggregator orderings
+  under Byzantine attacks reproduce on it (EXPERIMENTS.md §Repro caveat).
+  Images are (H, W, ch) in [0, 1], so the paper's nonlinear augmentations
+  (Lotka-Volterra / Arnold's Cat Map, data/augment.py) apply directly.
+* **SyntheticLM** — a deterministic token stream with n-gram structure for
+  the language-model architectures' end-to-end training driver.
+
+Everything derives from a single integer seed via ``jax.random`` /
+``numpy.random.Generator(PCG64(seed))`` — byte-for-byte reproducible, no
+files.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class SyntheticImages:
+    num_classes: int = 10
+    height: int = 32
+    width: int = 32
+    channels: int = 3
+    noise: float = 0.25
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        yy, xx = np.mgrid[0:self.height, 0:self.width].astype(np.float32)
+        yy, xx = yy / self.height, xx / self.width
+        templates = []
+        for _ in range(self.num_classes):
+            t = np.zeros((self.height, self.width, self.channels), np.float32)
+            for c in range(self.channels):
+                for _ in range(3):  # 3 low-frequency components
+                    fy, fx = rng.integers(1, 4, size=2)
+                    ph = rng.uniform(0, 2 * np.pi, size=2)
+                    t[:, :, c] += rng.uniform(0.3, 1.0) * (
+                        np.sin(2 * np.pi * fy * yy + ph[0])
+                        * np.sin(2 * np.pi * fx * xx + ph[1]))
+            t = (t - t.min()) / max(t.max() - t.min(), 1e-6)
+            templates.append(t)
+        self.templates = jnp.asarray(np.stack(templates))
+
+    def sample(self, key, batch: int):
+        """-> (images (B,H,W,ch) in [0,1], labels (B,))."""
+        k1, k2 = jax.random.split(key)
+        y = jax.random.randint(k1, (batch,), 0, self.num_classes)
+        x = self.templates[y]
+        x = x + self.noise * jax.random.normal(k2, x.shape)
+        return jnp.clip(x, 0.0, 1.0), y
+
+    def test_set(self, n: int = 2048, seed: int = 999):
+        return self.sample(jax.random.PRNGKey(seed), n)
+
+
+@dataclass
+class SyntheticLM:
+    """Markov-chain token stream: learnable structure, deterministic."""
+    vocab_size: int = 512
+    order: int = 2
+    seed: int = 0
+    branch: int = 4   # successors per context
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # hash-based successor table: ctx -> branch successor tokens
+        self._a = rng.integers(1, 2**31 - 1)
+        self._b = rng.integers(1, 2**31 - 1)
+
+    def _succ(self, ctx):
+        h = (ctx * self._a + self._b) % (2**31 - 1)
+        return (h[..., None] * (jnp.arange(self.branch) + 1)) % self.vocab_size
+
+    def sample(self, key, batch: int, seq_len: int):
+        """-> tokens (B, S+1) int32; use [:, :-1] as inputs, [:, 1:] labels."""
+        k1, k2 = jax.random.split(key)
+        start = jax.random.randint(k1, (batch,), 0, self.vocab_size)
+        picks = jax.random.randint(k2, (batch, seq_len), 0, self.branch)
+
+        def step(tok, pick):
+            succ = self._succ(tok)
+            nxt = jnp.take_along_axis(succ, pick[:, None], axis=-1)[:, 0]
+            return nxt, tok
+
+        last, toks = jax.lax.scan(step, start, picks.T)
+        toks = jnp.concatenate([toks.T, last[:, None]], axis=1)
+        return toks.astype(jnp.int32)
+
+    def batch(self, key, batch: int, seq_len: int):
+        toks = self.sample(key, batch, seq_len)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_image_task(seed: int = 0, **kw) -> SyntheticImages:
+    return SyntheticImages(seed=seed, **kw)
+
+
+def make_lm_task(vocab_size: int, seed: int = 0, **kw) -> SyntheticLM:
+    return SyntheticLM(vocab_size=vocab_size, seed=seed, **kw)

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot-spots of the Flag Aggregator stack.
+
+The paper's per-iteration hot spot is the SVD/Gram of the n x p gradient
+matrix (their Sec. 4 complexity note); our Gram-space reformulation reduces
+the n-scale work to three memory-bound streaming ops, each implemented as a
+Pallas kernel with explicit BlockSpec VMEM tiling:
+
+  gram/          K = G^T G        -- blocked tall-skinny matmul, fp32 VMEM acc
+  weighted_sum/  d = G @ c        -- fused weighted combine of worker gradients
+  coord_stats/   median/trimmed/  -- odd-even-transposition sort network over
+                 meamed/phocas      the (tiny) worker axis, blocked over n
+  flash_attn/    online-softmax attention (serving path of the dense archs)
+
+Each kernel ships ``ops.py`` (jit'd public wrapper; ``interpret=`` defaults
+to True off-TPU so the same code path runs in CI) and ``ref.py`` (pure-jnp
+oracle).  ``tests/test_kernels_*.py`` sweep shapes and dtypes asserting
+allclose against the oracle.
+"""

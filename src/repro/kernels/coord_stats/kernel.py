@@ -1,0 +1,105 @@
+"""Coordinate-wise robust statistics over the worker axis, blocked over n.
+
+These are the O(n*p) memory-bound inner loops of the coordinate-wise
+baseline aggregators (median / trimmed-mean / MeaMed / Phocas).  The sort
+that dominates them runs over the *worker* axis, which is tiny (p <= 64) and
+static — so instead of ``lax.sort`` (unsupported inside Pallas TPU kernels)
+we unroll an **odd-even transposition sorting network**: p rounds of
+vectorized compare-exchange on (p, block_n) VMEM tiles.  Each
+compare-exchange is a min/max pair on full lanes, i.e. pure VPU work, and
+the network depth is p — for p = 16..64 the kernel stays comfortably
+memory-bound, which is the roofline-optimal regime for these ops.
+
+Key-value variants (MeaMed/Phocas need "k values nearest a center") carry
+the payload through the network with ``where`` on the swap predicate.
+
+Worker-axis padding: p is padded to the fp32 sublane multiple (8) with
++inf sentinel keys, which sort to the top and are never touched by the
+statistics (they all index < p).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sort_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Odd-even transposition sort along axis 0 (ascending). Static p."""
+    p = x.shape[0]
+    for rnd in range(p):
+        start = rnd % 2
+        for i in range(start, p - 1, 2):
+            lo = jnp.minimum(x[i], x[i + 1])
+            hi = jnp.maximum(x[i], x[i + 1])
+            x = x.at[i].set(lo).at[i + 1].set(hi)
+    return x
+
+
+def _sort_rows_kv(k: jnp.ndarray, v: jnp.ndarray):
+    """Sort rows of k ascending, permuting payload v identically."""
+    p = k.shape[0]
+    for rnd in range(p):
+        start = rnd % 2
+        for i in range(start, p - 1, 2):
+            swap = k[i] > k[i + 1]
+            k_lo = jnp.where(swap, k[i + 1], k[i])
+            k_hi = jnp.where(swap, k[i], k[i + 1])
+            v_lo = jnp.where(swap, v[i + 1], v[i])
+            v_hi = jnp.where(swap, v[i], v[i + 1])
+            k = k.at[i].set(k_lo).at[i + 1].set(k_hi)
+            v = v.at[i].set(v_lo).at[i + 1].set(v_hi)
+    return k, v
+
+
+def _median_from_sorted(s: jnp.ndarray, p: int) -> jnp.ndarray:
+    if p % 2 == 1:
+        return s[(p - 1) // 2]
+    return 0.5 * (s[p // 2 - 1] + s[p // 2])
+
+
+def _make_kernel(op: str, p: int, f: int):
+    def kernel(g_ref, out_ref):
+        g = g_ref[...].astype(jnp.float32)        # (p_pad, block_n)
+        s = _sort_rows(g)
+        if op == "median":
+            r = _median_from_sorted(s, p)
+        elif op == "trimmed_mean":
+            r = jnp.mean(s[f:p - f], axis=0)
+        elif op in ("meamed", "phocas"):
+            if op == "meamed":
+                center = _median_from_sorted(s, p)
+            else:
+                center = jnp.mean(s[f:p - f], axis=0)
+            dist = jnp.abs(g - center[None, :])    # +inf rows stay +inf
+            _, vals = _sort_rows_kv(dist, g)
+            r = jnp.mean(vals[:p - f], axis=0)
+        else:
+            raise ValueError(op)
+        out_ref[...] = r[None, :].astype(out_ref.dtype)
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "f", "block_n", "interpret"))
+def coord_stats_pallas(Gw: jnp.ndarray, *, op: str, f: int = 1,
+                       block_n: int = 2048, interpret: bool = True):
+    """Coordinate-wise robust stat over workers.  Gw: (p, n) -> (n,)."""
+    p, n = Gw.shape
+    p_pad = -(-p // 8) * 8
+    n_pad = -(-n // block_n) * block_n
+    inf = jnp.asarray(jnp.finfo(jnp.float32).max, Gw.dtype)
+    Gp = jnp.full((p_pad, n_pad), inf, Gw.dtype).at[:p, :n].set(Gw)
+
+    out = pl.pallas_call(
+        _make_kernel(op, p, f),
+        grid=(n_pad // block_n,),
+        in_specs=[pl.BlockSpec((p_pad, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), jnp.float32),
+        interpret=interpret,
+    )(Gp)
+    return out[0, :n]

@@ -1,0 +1,30 @@
+"""Public wrapper for coordinate-wise robust stats (see gram/ops.py)."""
+
+from __future__ import annotations
+
+from repro.kernels.gram.ops import on_tpu
+from repro.kernels.coord_stats.kernel import coord_stats_pallas
+from repro.kernels.coord_stats import ref
+
+_REFS = {
+    "median": lambda Gw, f: ref.median_ref(Gw),
+    "trimmed_mean": ref.trimmed_mean_ref,
+    "meamed": ref.meamed_ref,
+    "phocas": ref.phocas_ref,
+}
+
+
+def coord_stat(Gw, *, op: str, f: int = 1, impl: str = "xla",
+               block_n: int = 2048):
+    """Coordinate-wise robust statistic. op: median|trimmed_mean|meamed|phocas."""
+    if op not in _REFS:
+        raise ValueError(f"unknown op {op!r}")
+    if impl == "xla":
+        return _REFS[op](Gw, f)
+    if impl == "pallas":
+        return coord_stats_pallas(Gw, op=op, f=f, block_n=block_n,
+                                  interpret=not on_tpu())
+    if impl == "pallas_interpret":
+        return coord_stats_pallas(Gw, op=op, f=f, block_n=block_n,
+                                  interpret=True)
+    raise ValueError(f"unknown impl {impl!r}")

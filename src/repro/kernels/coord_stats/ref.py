@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the coordinate-wise robust statistics kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def median_ref(Gw: jnp.ndarray) -> jnp.ndarray:
+    """Coordinate-wise median over the worker axis.  Gw: (p, n) -> (n,)."""
+    return jnp.median(Gw, axis=0)
+
+
+def trimmed_mean_ref(Gw: jnp.ndarray, f: int) -> jnp.ndarray:
+    """Mean after dropping the f largest and f smallest per coordinate."""
+    p = Gw.shape[0]
+    s = jnp.sort(Gw, axis=0)
+    return jnp.mean(s[f:p - f], axis=0)
+
+
+def meamed_ref(Gw: jnp.ndarray, f: int) -> jnp.ndarray:
+    """Mean of the p-f values closest to the coordinate-wise median."""
+    p = Gw.shape[0]
+    med = jnp.median(Gw, axis=0)
+    d = jnp.abs(Gw - med[None, :])
+    order = jnp.argsort(d, axis=0)
+    return jnp.mean(jnp.take_along_axis(Gw, order[:p - f], axis=0), axis=0)
+
+
+def phocas_ref(Gw: jnp.ndarray, f: int) -> jnp.ndarray:
+    """Mean of the p-f values closest to the trimmed mean."""
+    p = Gw.shape[0]
+    tm = trimmed_mean_ref(Gw, f)
+    d = jnp.abs(Gw - tm[None, :])
+    order = jnp.argsort(d, axis=0)
+    return jnp.mean(jnp.take_along_axis(Gw, order[:p - f], axis=0), axis=0)

@@ -1,0 +1,23 @@
+"""Public wrapper for flash attention (see gram/ops.py for the impl knob)."""
+
+from __future__ import annotations
+
+from repro.kernels.gram.ops import on_tpu
+from repro.kernels.flash_attn.kernel import flash_attn_pallas
+from repro.kernels.flash_attn.ref import flash_attn_ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    impl: str = "xla", block_q: int = 128, block_k: int = 128):
+    """Multi-head attention. q: (b,h,sq,d), k/v: (b,h,sk,d) -> (b,h,sq,d)."""
+    if impl == "xla":
+        return flash_attn_ref(q, k, v, causal=causal, window=window, scale=scale)
+    if impl == "pallas":
+        return flash_attn_pallas(q, k, v, causal=causal, window=window,
+                                 scale=scale, block_q=block_q, block_k=block_k,
+                                 interpret=not on_tpu())
+    if impl == "pallas_interpret":
+        return flash_attn_pallas(q, k, v, causal=causal, window=window,
+                                 scale=scale, block_q=block_q, block_k=block_k,
+                                 interpret=True)
+    raise ValueError(f"unknown impl {impl!r}")

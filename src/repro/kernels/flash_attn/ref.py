@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention_mask(seq_q: int, seq_k: int, *, causal: bool,
+                   window: int | None) -> jnp.ndarray:
+    """(seq_q, seq_k) boolean mask.  Query i sits at absolute position
+    i + (seq_k - seq_q) (decode convention: queries are the tail)."""
+    row = jnp.arange(seq_q)[:, None] + (seq_k - seq_q)
+    col = jnp.arange(seq_k)[None, :]
+    mask = jnp.ones((seq_q, seq_k), bool)
+    if causal:
+        mask &= col <= row
+    if window is not None:
+        mask &= col > row - window
+    return mask
+
+
+def flash_attn_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """Softmax attention.  q: (b, h, sq, d), k/v: (b, h, sk, d)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = attention_mask(q.shape[2], k.shape[2], causal=causal, window=window)
+    s = jnp.where(mask[None, None], s, NEG)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p * mask[None, None]
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(l > 0, p / jnp.maximum(l, 1e-30), 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,60 @@
+"""Blocked tall-skinny Gram kernel:  K = G^T G,  G in R^{n x p},  p << n.
+
+TPU mapping.  G streams HBM -> VMEM in (block_n, p_pad) tiles; the (p_pad,
+p_pad) fp32 accumulator lives in the *output* VMEM block, which every grid
+step revisits (index_map is constant) — the canonical Pallas reduction
+pattern.  p is padded to the 128-lane width so the MXU sees an aligned
+(block_n x 128) @ (128 x block_n)^T contraction; zero padding contributes
+zeros to K, removed by the wrapper.
+
+The contraction is issued as  dot(G_blk^T, G_blk)  with
+preferred_element_type=float32 so bf16 gradients accumulate in fp32 (bf16
+Gram accumulation is one of the §Perf experiments — see ops.gram(precision=...)).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(g_ref, k_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        k_ref[...] = jnp.zeros_like(k_ref)
+
+    g = g_ref[...]                                   # (block_n, p_pad)
+    k_ref[...] += jax.lax.dot_general(
+        g, g,
+        dimension_numbers=(((0,), (0,)), ((), ())),  # contract over n-block
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gram_pallas(G: jnp.ndarray, *, block_n: int = 1024,
+                interpret: bool = True) -> jnp.ndarray:
+    """K = G^T G via pallas_call.  G: (n, p); returns (p, p) fp32.
+
+    The wrapper pads n up to a block multiple and p up to the 128-lane
+    width; padding rows/cols are zero so they do not perturb K.
+    """
+    n, p = G.shape
+    p_pad = max(128, -(-p // 128) * 128)
+    n_pad = -(-n // block_n) * block_n
+    Gp = jnp.zeros((n_pad, p_pad), G.dtype).at[:n, :p].set(G)
+
+    K = pl.pallas_call(
+        _gram_kernel,
+        grid=(n_pad // block_n,),
+        in_specs=[pl.BlockSpec((block_n, p_pad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((p_pad, p_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p_pad, p_pad), jnp.float32),
+        interpret=interpret,
+    )(Gp)
+    return K[:p, :p]

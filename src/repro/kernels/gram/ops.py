@@ -1,0 +1,29 @@
+"""Public wrapper for the Gram kernel.
+
+``gram(G)`` dispatches to the Pallas kernel (compiled on TPU, interpret mode
+elsewhere) or the XLA reference — callers pick via ``impl=``; the distributed
+aggregator defaults to ``xla`` so the multi-pod dry-run lowers on the host
+platform, and flips to ``pallas`` on real TPU via config.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gram.kernel import gram_pallas
+from repro.kernels.gram.ref import gram_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gram(G, *, impl: str = "xla", block_n: int = 1024):
+    """K = G^T G (fp32). impl: 'xla' | 'pallas' | 'pallas_interpret'."""
+    if impl == "xla":
+        return gram_ref(G)
+    if impl == "pallas":
+        return gram_pallas(G, block_n=block_n, interpret=not on_tpu())
+    if impl == "pallas_interpret":
+        return gram_pallas(G, block_n=block_n, interpret=True)
+    raise ValueError(f"unknown impl {impl!r}")

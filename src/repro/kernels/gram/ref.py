@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the Gram kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(G: jnp.ndarray) -> jnp.ndarray:
+    """K = G^T G accumulated in fp32.  G: (n, p) -> K: (p, p) fp32."""
+    Gf = G.astype(jnp.float32)
+    return Gf.T @ Gf

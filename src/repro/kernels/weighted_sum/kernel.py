@@ -1,0 +1,45 @@
+"""Fused weighted-combine kernel:  d = G @ c  (the FA update, Alg. 1 line 6).
+
+This is a memory-bound streaming op (read n*p, write n): each grid step
+pulls a (block_n, p_pad) tile of G into VMEM, multiplies by the replicated
+weight row c (VMEM-resident, index_map constant), and writes the (block_n, 1)
+output tile.  Fusing the scale-and-reduce avoids materializing the scaled
+G (the naive XLA schedule for `(G * c).sum(1)` at n ~ 1e9 would) and keeps
+arithmetic intensity at the streaming roofline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wsum_kernel(g_ref, c_ref, d_ref):
+    g = g_ref[...].astype(jnp.float32)        # (block_n, p_pad)
+    c = c_ref[...].astype(jnp.float32)        # (1, p_pad)
+    d_ref[...] = jnp.sum(g * c, axis=1, keepdims=True).astype(d_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def weighted_sum_pallas(G: jnp.ndarray, c: jnp.ndarray, *,
+                        block_n: int = 2048, interpret: bool = True):
+    """d = G @ c.  G: (n, p), c: (p,) -> (n,) in G.dtype."""
+    n, p = G.shape
+    p_pad = max(128, -(-p // 128) * 128)
+    n_pad = -(-n // block_n) * block_n
+    Gp = jnp.zeros((n_pad, p_pad), G.dtype).at[:n, :p].set(G)
+    cp = jnp.zeros((1, p_pad), c.dtype).at[0, :p].set(c)
+
+    d = pl.pallas_call(
+        _wsum_kernel,
+        grid=(n_pad // block_n,),
+        in_specs=[pl.BlockSpec((block_n, p_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((1, p_pad), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), G.dtype),
+        interpret=interpret,
+    )(Gp, cp)
+    return d[:n, 0]

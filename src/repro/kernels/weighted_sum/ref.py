@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the weighted-combine kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_sum_ref(G: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """d = G @ c with fp32 accumulation.  G: (n, p), c: (p,) -> d: (n,) in
+    G.dtype (the gradient dtype the optimizer consumes)."""
+    d = G.astype(jnp.float32) @ c.astype(jnp.float32)
+    return d.astype(G.dtype)

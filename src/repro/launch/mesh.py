@@ -1,0 +1,38 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run process
+must set XLA_FLAGS *before* the first jax initialization.
+
+Mesh shapes (TPU v5e):
+  single pod:  (data=16, model=16)            = 256 chips
+  multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+
+The FA *worker* axis is (pod, data): p = 16 workers single-pod, 32 workers
+multi-pod; the ``model`` axis carries Megatron-style tensor parallelism.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None):
+    """Tiny (data, model) mesh over whatever devices exist (CPU tests)."""
+    n = n_devices or len(jax.devices())
+    model = next((m for m in (4, 2) if n % m == 0 and n > m), 1)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def worker_count(mesh) -> int:
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            n *= mesh.shape[ax]
+    return n

@@ -1,0 +1,115 @@
+"""Training launcher.
+
+On a real pod this runs under the production mesh with the shardings the
+dry-run validates; on CPU (`--debug`) it trains the reduced variant of the
+selected architecture end-to-end on the synthetic LM task — the same code
+path, one device.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --debug --steps 100 --aggregator flag --attack random --byzantine 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step
+from repro.configs import get_config, reduce_for_smoke
+from repro.configs.shapes import SHAPES
+from repro.core.flag import FlagConfig
+from repro.data.pipeline import WorkerDataConfig, lm_worker_batches
+from repro.data.synthetic import SyntheticLM
+from repro.dist.aggregation import AggregatorConfig
+from repro.dist.sharding import use_sharding
+from repro.dist.train_step import TrainConfig, build_train_step, init_train_state
+from repro.launch.mesh import make_production_mesh, worker_count
+from repro.optim import adamw, sgd, warmup_cosine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--debug", action="store_true",
+                    help="reduced config on local devices (CPU)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--per-worker-batch", type=int, default=4)
+    ap.add_argument("--aggregator", default="flag")
+    ap.add_argument("--attack", default="none")
+    ap.add_argument("--byzantine", type=int, default=0)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--lam", type=float, default=-1.0,
+                    help="FA lambda (-1 = auto: p if p>6 else 0)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    if args.debug:
+        cfg = reduce_for_smoke(get_config(args.arch)).replace(
+            frontend=None, num_prefix_embeds=0)
+        mesh = None
+        W = args.workers
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        W = worker_count(mesh)
+
+    lam = args.lam if args.lam >= 0 else (float(W) if W > 6 else 0.0)
+    tc = TrainConfig(
+        aggregator=AggregatorConfig(
+            name=args.aggregator, f=args.byzantine,
+            flag=FlagConfig(lam=lam,
+                            regularizer="pairwise" if lam else "none")),
+        attack=args.attack, attack_f=args.byzantine)
+    opt = adamw() if args.optimizer == "adamw" else sgd(momentum=0.9)
+    sched = warmup_cosine(args.lr, args.steps, warmup=min(20, args.steps // 5))
+
+    params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step0 = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), step0 = load_checkpoint(
+            args.ckpt_dir, (params, opt_state))
+        print(f"resumed from step {step0}")
+
+    step_fn = jax.jit(build_train_step(cfg, tc, opt, sched))
+    task = SyntheticLM(vocab_size=cfg.vocab_size)
+    wdc = WorkerDataConfig(workers=W, per_worker_batch=args.per_worker_batch)
+
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M workers={W} "
+          f"agg={args.aggregator}(lam={lam}) attack={args.attack} "
+          f"f={args.byzantine}")
+    t0 = time.time()
+    ctx = use_sharding(mesh, {}) if mesh is not None else None
+    if ctx:
+        ctx.__enter__()
+    try:
+        for t in range(step0, step0 + args.steps):
+            batch = lm_worker_batches(task, wdc, t, args.seq)
+            params, opt_state, m = step_fn(params, opt_state, batch,
+                                           jax.random.PRNGKey(t),
+                                           jnp.asarray(t, jnp.int32))
+            if t % args.log_every == 0 or t == step0 + args.steps - 1:
+                print(f"step {t:5d} loss {float(m['loss']):.4f} "
+                      f"lr {float(m['lr']):.2e} "
+                      f"|g| {float(m['grad_global_norm']):.3f} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+            if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, t + 1, (params, opt_state))
+    finally:
+        if ctx:
+            ctx.__exit__(None, None, None)
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, step0 + args.steps,
+                        (params, opt_state))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Model configuration dataclasses.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; the
+transformer assembler (:mod:`repro.models.transformer`) is driven entirely
+by this config, so an architecture is *data*, not code.
+
+``block_pattern`` is the repeating unit of the layer stack (e.g.
+``("attn",)`` for a llama-style dense model, ``("rglru", "rglru", "attn")``
+for RecurrentGemma's 2:1 temporal-mixing pattern, or an 8-long mLSTM/sLSTM
+period for xLSTM).  The stack is ``num_layers`` entries of the cycled
+pattern; full periods are executed under one ``lax.scan`` over stacked
+params (keeps HLO size O(1) in depth — essential for the 40-config
+multi-pod dry-run), with any non-period tail applied unstacked.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MoESettings:
+    """Mixture-of-Experts block settings.
+
+    ``d_expert`` is the per-expert FFN width (deepseek's fine-grained experts
+    use a small one).  ``num_shared`` experts run densely for every token
+    (deepseek-moe).  Routing is top-k softmax with capacity-based token
+    dropping (GShard/Switch style) implemented via sort+scatter, so the
+    FLOPs are the *active* FLOPs, not num_experts x dense.
+    """
+    num_experts: int
+    top_k: int
+    num_shared: int = 0
+    d_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01   # load-balance loss weight
+    router_z_weight: float = 1e-3     # router logit z-loss
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                    # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    block_pattern: tuple[str, ...] = ("attn",)
+    moe: MoESettings | None = None
+    moe_skip_first: bool = False      # deepseek: layer 0 keeps a dense FFN
+    dense_d_ff_first: int = 0         # ... of this width
+    window: int | None = None         # sliding-window attention (Mixtral: 4096)
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0        # stablelm-2 rotates 25% of head_dim
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    act: str = "silu"                 # silu | gelu
+    gated_mlp: bool = True            # SwiGLU/GeGLU vs plain 2-layer MLP
+    use_bias: bool = False
+    tie_embeddings: bool = False
+    pos: str = "rope"                 # rope | sinusoidal | none
+    # multimodal stub frontends (the ONE sanctioned stub):
+    frontend: str | None = None       # None | 'vision' | 'audio'
+    num_prefix_embeds: int = 0        # patches / conditioning frames
+    d_frontend: int = 0               # frontend embedding width
+    # recurrent blocks:
+    mlstm_proj_factor: float = 2.0    # mLSTM up-projection
+    slstm_proj_factor: float = 1.3334 # sLSTM post-FFN factor (4/3)
+    conv_width: int = 4               # short conv in rglru/mlstm blocks
+    rglru_width: int = 0              # 0 -> d_model
+    # numerics
+    compute_dtype: str = "bfloat16"   # matmul/activation dtype
+    param_dtype: str = "float32"
+    logit_softcap: float = 0.0        # recurrentgemma uses 30.0
+    # execution
+    remat: bool = True                # checkpoint each block in training
+    scan_layers: bool = True          # False: unroll the period stack —
+    # used by the dry-run roofline pass because XLA's HloCostAnalysis counts
+    # while-loop bodies ONCE (verified empirically); unrolling makes HLO
+    # FLOPs/collectives exact per layer at the cost of HLO size.
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % self.num_kv_heads == 0, \
+            f"{self.name}: heads {self.num_heads} % kv {self.num_kv_heads}"
+
+    # ---- derived structure -------------------------------------------------
+    def layer_kinds(self) -> tuple[str, ...]:
+        return tuple(self.block_pattern[i % len(self.block_pattern)]
+                     for i in range(self.num_layers))
+
+    @property
+    def period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def n_full_periods(self) -> int:
+        return self.num_layers // self.period
+
+    @property
+    def tail_kinds(self) -> tuple[str, ...]:
+        return self.layer_kinds()[self.n_full_periods * self.period:]
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if self.moe is None:
+            return False
+        return not (self.moe_skip_first and layer_idx == 0)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter count (for roofline MODEL_FLOPS = 6*N*D) ----------------
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init to <1%; exact in tests)."""
+        from repro.models.transformer import count_params_analytic
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE counts top_k + shared experts)."""
+        from repro.models.transformer import count_params_analytic
+        return count_params_analytic(self, active_only=True)

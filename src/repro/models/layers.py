@@ -1,0 +1,132 @@
+"""Primitive layers: norms, linear, embeddings, rotary/sinusoidal positions.
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every layer is a
+pair of functions  init(key, ...) -> params  and  apply(params, x, ...).
+Sharding is injected through :func:`repro.dist.sharding.shard` logical-axis
+constraints so the same model code runs single-host and on the pod mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+
+def truncated_normal_init(key, shape, scale, dtype=jnp.float32):
+    """He-style fan-in init (stddev = scale / sqrt(fan_in))."""
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale / max(fan_in, 1) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in, d_out, *, use_bias=False, scale=1.0,
+                dtype=jnp.float32, axes=("embed", "mlp")):
+    p = {"w": shard(truncated_normal_init(key, (d_in, d_out), scale, dtype), axes)}
+    if use_bias:
+        p["b"] = shard(jnp.zeros((d_out,), dtype), axes[-1:])
+    return p
+
+
+def linear(p, x, compute_dtype=jnp.bfloat16):
+    y = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d, kind="rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab, d_model, dtype=jnp.float32):
+    table = jax.random.normal(key, (vocab, d_model), jnp.float32)
+    return {"table": shard((table * d_model ** -0.5).astype(dtype),
+                           ("vocab", "embed"))}
+
+
+def embed(p, ids, compute_dtype=jnp.bfloat16):
+    return jnp.take(p["table"], ids, axis=0).astype(compute_dtype)
+
+
+def unembed(p, x, compute_dtype=jnp.bfloat16):
+    """Logits (tied or untied table passed in p)."""
+    return x.astype(compute_dtype) @ p["table"].T.astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, rope_fraction=1.0, theta=10000.0):
+    """Inverse frequencies for the rotated fraction of head_dim."""
+    rot = int(head_dim * rope_fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)), rot
+
+
+def apply_rope(x, positions, *, theta=10000.0, rope_fraction=1.0):
+    """x: (..., seq, head_dim), positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    inv, rot = rope_freqs(head_dim, rope_fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv      # (..., seq, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+def sinusoidal_positions(positions, d_model):
+    """Classic transformer sinusoids. positions: (..., seq) -> (..., seq, d)."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x, cap: float):
+    """tanh soft-capping (recurrentgemma logits)."""
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "tanh": jnp.tanh}

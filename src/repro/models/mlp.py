@@ -1,0 +1,39 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain 2-layer MLPs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    d = cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": layers.linear_init(ks[0], d, d_ff, use_bias=cfg.use_bias,
+                                 dtype=dt, axes=("embed", "mlp")),
+        "down": layers.linear_init(ks[1], d_ff, d, use_bias=cfg.use_bias,
+                                   dtype=dt, axes=("mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        p["gate"] = layers.linear_init(ks[2], d, d_ff, use_bias=cfg.use_bias,
+                                       dtype=dt, axes=("embed", "mlp"))
+    return p
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    act = layers.ACTS[cfg.act]
+    h = layers.linear(p["up"], x, cdt)
+    if "gate" in p:
+        h = h * act(layers.linear(p["gate"], x, cdt))
+    else:
+        h = act(h)
+    from repro.dist.sharding import shard
+    h = shard(h, ("sub_batch", "seq", "mlp"))
+    return layers.linear(p["down"], h, cdt)

@@ -1,0 +1,306 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential) — Beck et al., arXiv:2405.04517.
+
+mLSTM is a linear-attention-style cell with exponential gating:
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, exp(-m_t)),
+
+stabilized by the running log-scale m_t (gates live in log space).  We run
+it **chunkwise**: within a chunk of length c the contributions are computed
+as a (c x c) masked parallel form (quadratic in c, MXU-friendly); across
+chunks a ``lax.scan`` carries (C, n, m).  A step-by-step sequential
+reference (``mlstm_sequential``) is kept for equivalence tests.
+
+sLSTM has per-unit scalar memory with recurrent gate connections
+(block-diagonal per head), which makes it inherently sequential — a
+``lax.scan`` over time; this is the paper's trade-off, and why xLSTM-1.3b
+interleaves 7 mLSTM : 1 sLSTM.
+
+TPU adaptation notes (DESIGN.md §2): chunk size 256 keeps the quadratic
+intra-chunk work MXU-aligned; head dims shard over the ``model`` axis
+(heads are independent); the recurrent state is the decode cache, O(1) in
+sequence length — this is why xlstm-1.3b runs ``long_500k`` natively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (short; used by mLSTM and RG-LRU blocks)
+# ---------------------------------------------------------------------------
+
+def conv_init(key, width, d, dtype=jnp.float32):
+    return {"w": (jax.random.normal(key, (width, d), jnp.float32)
+                  * (1.0 / width)).astype(dtype),
+            "b": jnp.zeros((d,), dtype)}
+
+
+def conv_apply(p, x, state=None):
+    """x: (B, S, d).  state: (B, width-1, d) trailing context for decode.
+    Returns (y, new_state)."""
+    w = p["w"].astype(x.dtype)
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(w[j] * jax.lax.dynamic_slice_in_dim(
+        xp, (width - 1) - j, x.shape[1], axis=1) for j in range(width))
+    y = y + p["b"].astype(x.dtype)
+    return y, xp[:, -(width - 1):, :]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """One chunk, parallel form.  q,k: (B,H,c,dk), v: (B,H,c,dv),
+    li/lf: (B,H,c) log input/forget gates.  state = (C, n, m)."""
+    C, n, m = state                      # (B,H,dk,dv), (B,H,dk), (B,H)
+    c = q.shape[2]
+    a = jnp.cumsum(lf, axis=-1)                       # (B,H,c) inclusive
+    # D_ts = a_t - a_s + li_s  for s <= t
+    D = a[..., :, None] - a[..., None, :] + li[..., None, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(tri, D, NEG)
+    m_intra = jnp.max(D, axis=-1)                     # (B,H,c)
+    m_inter = a + m[..., None]                        # state carries scale m
+    m_t = jnp.maximum(m_intra, m_inter)
+
+    dots = jnp.einsum("bhtd,bhsd->bhts", q, k)
+    W = jnp.exp(D - m_t[..., None]) * jnp.where(tri, 1.0, 0.0)
+    num = jnp.einsum("bhts,bhsv->bhtv", W * dots, v)
+    den = jnp.einsum("bhts,bhts->bht", W, dots)
+
+    scale = jnp.exp(m_inter - m_t)                    # (B,H,c)
+    num = num + scale[..., None] * jnp.einsum("bhtd,bhdv->bhtv", q, C)
+    den = den + scale * jnp.einsum("bhtd,bhd->bht", q, n)
+
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # chunk-end state update
+    a_c = a[..., -1]                                  # (B,H)
+    m_new = jnp.maximum(a_c + m, jnp.max(a_c[..., None] - a + li, axis=-1))
+    w_state = jnp.exp(a_c[..., None] - a + li - m_new[..., None])  # (B,H,c)
+    C_new = (jnp.exp(a_c + m - m_new)[..., None, None] * C
+             + jnp.einsum("bhs,bhsd,bhsv->bhdv", w_state, k, v))
+    n_new = (jnp.exp(a_c + m - m_new)[..., None] * n
+             + jnp.einsum("bhs,bhsd->bhd", w_state, k))
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_parallel(q, k, v, li, lf, state, *, chunk=256):
+    """Chunkwise mLSTM over a full sequence.  Shapes as in _mlstm_chunk with
+    seq len S; pads S to a chunk multiple.  Returns (h, final_state)."""
+    B, H, S, dk = q.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        zq = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 3))
+        q, k, v = zq(q), zq(k), zq(v)
+        li = jnp.pad(li, ((0, 0), (0, 0), (0, pad)), constant_values=NEG)
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))  # lf=0 => identity decay
+    nc = q.shape[2] // c
+
+    def body(st, xs):
+        qc, kc, vc, lic, lfc = xs
+        h, st = _mlstm_chunk(qc, kc, vc, lic, lfc, st)
+        return st, h
+
+    split = lambda x: jnp.moveaxis(
+        x.reshape(B, H, nc, c, *x.shape[3:]), 2, 0)
+    st, hs = jax.lax.scan(body, state,
+                          (split(q), split(k), split(v), split(li), split(lf)))
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, nc * c, -1)[:, :, :S]
+    return h, st
+
+
+def mlstm_sequential(q, k, v, li, lf, state):
+    """Step-by-step oracle for tests."""
+    def step(st, xs):
+        C, n, m = st
+        qt, kt, vt, lit, lft = xs
+        m_new = jnp.maximum(lft + m, lit)
+        fp = jnp.exp(lft + m - m_new)
+        ip = jnp.exp(lit - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhd,bhdv->bhv", qt, C)
+        den = jnp.einsum("bhd,bhd->bh", qt, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (q, k, v, li, lf))
+    st, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 2), st
+
+
+def mlstm_state_init(batch, heads, dk, dv, dtype=jnp.float32):
+    return (shard(jnp.zeros((batch, heads, dk, dv), dtype),
+                  ("sub_batch", "heads", None, None)),
+            shard(jnp.zeros((batch, heads, dk), dtype),
+                  ("sub_batch", "heads", None)),
+            jnp.full((batch, heads), -1e30, dtype))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (up-proj, conv, heads, gating, down-proj)
+# ---------------------------------------------------------------------------
+
+MLSTM_QKV_BLOCK = 4   # official xLSTM qkv_proj_blocksize: block-diagonal qkv
+
+
+def _blockdiag_init(key, d, bs, dtype):
+    nb = d // bs
+    w = layers.truncated_normal_init(key, (nb, bs, bs), 1.0, dtype)
+    return {"w": shard(w, ("state", None, None))}
+
+
+def _blockdiag_apply(p, x, cdt):
+    """Block-diagonal linear: x (..., d) with (nb, bs, bs) blocks."""
+    nb, bs, _ = p["w"].shape
+    y = jnp.einsum("...nb,nbc->...nc", x.reshape(*x.shape[:-1], nb, bs)
+                   .astype(cdt), p["w"].astype(cdt))
+    return y.reshape(*x.shape[:-1], nb * bs)
+
+
+def mlstm_block_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = int(cfg.mlstm_proj_factor * d)
+    H = cfg.num_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    bs = MLSTM_QKV_BLOCK
+    return {
+        "up": layers.linear_init(ks[0], d, 2 * d_in, dtype=dt,
+                                 axes=("embed", "state")),
+        "conv": conv_init(ks[1], cfg.conv_width, d_in, dt),
+        "wq": _blockdiag_init(ks[2], d_in, bs, dt),
+        "wk": _blockdiag_init(ks[3], d_in, bs, dt),
+        "wv": _blockdiag_init(ks[4], d_in, bs, dt),
+        "wif": layers.linear_init(ks[5], d_in, 2 * H, dtype=dt,
+                                  axes=("state", None)),
+        "norm": layers.norm_init(d_in, "rmsnorm", dt),
+        "down": layers.linear_init(ks[6], d_in, d, dtype=dt,
+                                   axes=("state", "embed")),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg, conv_state):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    cdt = jnp.dtype(cfg.compute_dtype)
+    d_in = p["conv"]["w"].shape[1]
+    up = layers.linear(p["up"], x, cdt)
+    xm, z = up[..., :d_in], up[..., d_in:]
+    xc, conv_state = conv_apply(p["conv"], xm, conv_state)
+    xc = jax.nn.silu(xc)
+    dk = d_in // H
+    heads = lambda t: t.reshape(B, S, H, dk).swapaxes(1, 2)
+    q = heads(_blockdiag_apply(p["wq"], xc, cdt)).astype(jnp.float32)
+    k = heads(_blockdiag_apply(p["wk"], xc, cdt)).astype(jnp.float32) * dk ** -0.5
+    v = heads(_blockdiag_apply(p["wv"], xm, cdt)).astype(jnp.float32)
+    ifg = layers.linear(p["wif"], xc, jnp.float32)
+    li = ifg[..., :H].swapaxes(1, 2)                  # (B,H,S) log input gate
+    lf = jax.nn.log_sigmoid(ifg[..., H:]).swapaxes(1, 2)
+    return q, k, v, li, lf, z, conv_state
+
+
+def mlstm_block_apply(p, x, cfg: ModelConfig, state=None, *, chunk=256):
+    """x: (B,S,d) -> (y, state).  state=(cell_state, conv_state) or None."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    d_in = p["conv"]["w"].shape[1]
+    cell, conv_state = state if state is not None else (
+        mlstm_state_init(B, H, d_in // H, d_in // H), None)
+    q, k, v, li, lf, z, conv_state = _mlstm_qkvif(p, x, cfg, conv_state)
+    h, cell = mlstm_parallel(q, k, v, li, lf, cell, chunk=chunk)
+    h = h.swapaxes(1, 2).reshape(B, S, d_in).astype(x.dtype)
+    h = layers.apply_norm(p["norm"], h, "rmsnorm")
+    h = h * jax.nn.silu(z.astype(h.dtype))
+    y = layers.linear(p["down"], h, jnp.dtype(cfg.compute_dtype))
+    return y, (cell, conv_state)
+
+
+def mlstm_block_decode(p, x, cfg: ModelConfig, state):
+    """One-token step: reuse the chunk path with S=1 (exact)."""
+    return mlstm_block_apply(p, x, cfg, state, chunk=1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    d_ff = int(cfg.slstm_proj_factor * d)
+    return {
+        "wx": layers.linear_init(ks[0], d, 4 * d, dtype=dt,
+                                 axes=("embed", "state")),   # z,i,f,o
+        "r": shard(layers.truncated_normal_init(ks[1], (4, H, dh, dh), 1.0, dt),
+                   (None, "heads", None, None)),
+        "norm": layers.norm_init(d, "rmsnorm", dt),
+        "ff_up": layers.linear_init(ks[2], d, d_ff, dtype=dt,
+                                    axes=("embed", "mlp")),
+        "ff_gate": layers.linear_init(ks[3], d, d_ff, dtype=dt,
+                                      axes=("embed", "mlp")),
+        "ff_down": layers.linear_init(ks[4], d_ff, d, dtype=dt,
+                                      axes=("mlp", "embed")),
+    }
+
+
+def slstm_state_init(batch, heads, dh, dtype=jnp.float32):
+    z = jnp.zeros((batch, heads, dh), dtype)
+    return (z, z + 1e-6, jnp.full_like(z, -1e30), z)  # c, n, m, h_prev
+
+
+def slstm_cell_scan(gx, r, state):
+    """gx: (B, S, 4, H, dh) input-side gate preactivations."""
+    def step(st, g):
+        c, n, m, h = st
+        rec = jnp.einsum("ghde,bhe->bghd", r.astype(jnp.float32), h)
+        zt = jnp.tanh(g[:, 0] + rec[:, 0])
+        li = g[:, 1] + rec[:, 1]
+        lf = jax.nn.log_sigmoid(g[:, 2] + rec[:, 2])
+        ot = jax.nn.sigmoid(g[:, 3] + rec[:, 3])
+        m_new = jnp.maximum(lf + m, li)
+        fp, ip = jnp.exp(lf + m - m_new), jnp.exp(li - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        h = ot * c / jnp.maximum(n, jnp.exp(-m_new))
+        return (c, n, m_new, h), h
+
+    st, hs = jax.lax.scan(step, state, jnp.moveaxis(gx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), st        # (B,S,H,dh)
+
+
+def slstm_block_apply(p, x, cfg: ModelConfig, state=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    if state is None:
+        state = slstm_state_init(B, H, dh)
+    gx = layers.linear(p["wx"], x, jnp.float32).reshape(B, S, 4, H, dh)
+    h, state = slstm_cell_scan(gx, p["r"], state)
+    h = layers.apply_norm(p["norm"], h.reshape(B, S, d).astype(x.dtype),
+                          "rmsnorm")
+    cdt = jnp.dtype(cfg.compute_dtype)
+    y = layers.linear(p["ff_down"],
+                      layers.linear(p["ff_up"], h, cdt)
+                      * jax.nn.silu(layers.linear(p["ff_gate"], h, cdt)), cdt)
+    return y, state

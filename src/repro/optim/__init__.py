@@ -1,0 +1,8 @@
+"""Optimizers + schedules (built natively; the paper trains with SGD)."""
+
+from repro.optim.optimizers import (sgd, adamw, Optimizer, init_opt_state,
+                                    apply_updates)
+from repro.optim.schedules import step_decay, cosine, constant, warmup_cosine
+
+__all__ = ["sgd", "adamw", "Optimizer", "init_opt_state", "apply_updates",
+           "step_decay", "cosine", "constant", "warmup_cosine"]

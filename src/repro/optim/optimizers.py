@@ -1,0 +1,87 @@
+"""SGD(+momentum) and AdamW as pure pytree transforms.
+
+The paper's experiments use SGD with a x0.2-every-10-epochs decay; AdamW is
+provided for the larger assigned architectures.  State lives in a plain
+dict so checkpointing and ZeRO-style sharding (dist/train_step.py,
+``zero1=True``) treat it like any other pytree.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable          # (grads, state, params, lr) -> (updates, state)
+
+
+def _tree_zeros(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def sgd(momentum: float = 0.9, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": _tree_zeros(params)} if momentum else {}
+
+    def update(grads, state, params, lr):
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype),
+                grads, params)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state["mu"], grads)
+            if nesterov:
+                upd = jax.tree.map(
+                    lambda m, g: momentum * m + g.astype(jnp.float32),
+                    mu, grads)
+            else:
+                upd = mu
+            state = {"mu": mu}
+        else:
+            upd = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        updates = jax.tree.map(lambda u: -lr * u, upd)
+        return updates, state
+
+    return Optimizer("sgd", init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"mu": _tree_zeros(params), "nu": _tree_zeros(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v, p: -lr * (m / c1 / (jnp.sqrt(v / c2) + eps)
+                                   + weight_decay * p.astype(jnp.float32)),
+            mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer("adamw", init, update)
+
+
+def init_opt_state(opt: Optimizer, params):
+    return opt.init(params)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (pure functions step -> lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(lr: float, *, decay: float = 0.2, every: int = 10_000):
+    """The paper's schedule: multiply by ``decay`` every ``every`` steps
+    (they use x0.2 every 10 epochs)."""
+    def f(step):
+        k = jnp.floor_divide(step, every).astype(jnp.float32)
+        return lr * decay ** k
+    return f
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return lr * (final_frac + (1 - final_frac)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return f
+
+
+def warmup_cosine(lr: float, total_steps: int, warmup: int = 100,
+                  final_frac: float = 0.1):
+    base = cosine(lr, total_steps, final_frac)
+    def f(step):
+        w = jnp.clip(step.astype(jnp.float32) / max(warmup, 1), 0.0, 1.0)
+        return w * base(jnp.maximum(step - warmup, 0))
+    return f

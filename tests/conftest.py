@@ -1,0 +1,34 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here — smoke
+tests and benchmarks must see the real single CPU device.  Only
+``repro.launch.dryrun`` (run as its own process) forces 512 host devices.
+Distributed tests that need a few devices spawn subprocesses or use
+``jax.sharding`` on whatever is available.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_gradient_matrix(rng, n=400, p=15, f=3, *, byz_scale=20.0,
+                         noise=0.3, dtype=np.float32):
+    """Worker-major (p, n) gradients: f Byzantine (uniform random), rest =
+    shared signal + per-worker minibatch-style noise."""
+    mu = rng.normal(size=n)
+    mu /= np.linalg.norm(mu)
+    honest = mu[None, :] + noise * rng.normal(size=(p - f, n))
+    byz = rng.uniform(-byz_scale, byz_scale, size=(f, n))
+    return np.concatenate([byz, honest], axis=0).astype(dtype)
+
+
+@pytest.fixture
+def grad_matrix(rng):
+    return make_gradient_matrix(rng)

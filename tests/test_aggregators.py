@@ -1,0 +1,120 @@
+"""Baseline aggregator unit tests + hypothesis property tests."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # hypothesis optional in minimal envs
+    HAVE_HYPOTHESIS = False
+
+from repro.core import aggregators
+from tests.conftest import make_gradient_matrix
+
+ROBUST = ["median", "trimmed_mean", "meamed", "phocas", "krum",
+          "multi_krum", "bulyan", "geomed", "flag"]
+ALL = ["mean", "pca"] + ROBUST
+
+
+class TestShapes:
+    @pytest.mark.parametrize("name", ALL)
+    def test_output_shape_and_finite(self, rng, name):
+        Gw = jnp.asarray(make_gradient_matrix(rng, n=100, p=9, f=2))
+        d = aggregators.get_aggregator(name)(Gw, f=2)
+        assert d.shape == (100,)
+        assert bool(jnp.all(jnp.isfinite(d)))
+
+
+class TestExactSmallCases:
+    def test_median_odd(self):
+        Gw = jnp.asarray([[1.0, 5.0], [2.0, -1.0], [100.0, 0.0]])
+        np.testing.assert_allclose(aggregators.median(Gw), [2.0, 0.0])
+
+    def test_trimmed_mean_drops_extremes(self):
+        Gw = jnp.asarray([[0.0], [1.0], [2.0], [3.0], [100.0]])
+        np.testing.assert_allclose(aggregators.trimmed_mean(Gw, f=1), [2.0])
+
+    def test_krum_picks_cluster_member(self, rng):
+        Gw = make_gradient_matrix(rng, n=50, p=7, f=1, byz_scale=50.0)
+        d = np.asarray(aggregators.krum(jnp.asarray(Gw), f=1))
+        dists = np.linalg.norm(Gw - d[None, :], axis=1)
+        assert dists.argmin() >= 1  # the selected gradient is an honest one
+
+    def test_meamed_equals_mean_when_identical(self):
+        Gw = jnp.ones((6, 4)) * 3.0
+        np.testing.assert_allclose(aggregators.meamed(Gw, f=2), jnp.full(4, 3.0))
+
+    def test_bulyan_requires_majority(self, rng):
+        # p=15, f=3 satisfies p >= 4f + 3.  Low per-worker noise so the
+        # beta=3 coordinate average is statistically tight.
+        Gw = jnp.asarray(make_gradient_matrix(rng, p=15, f=3, noise=0.05))
+        d = aggregators.bulyan(Gw, f=3)
+        hm = jnp.mean(Gw[3:], axis=0)
+        rel = float(jnp.linalg.norm(d - hm) / jnp.linalg.norm(hm))
+        assert rel < 0.5
+
+
+class TestRobustnessOrdering:
+    @pytest.mark.parametrize("name", ROBUST)
+    def test_beats_mean_under_attack(self, rng, name):
+        Gw = jnp.asarray(make_gradient_matrix(rng, n=400, p=15, f=3,
+                                              byz_scale=20.0))
+        hm = jnp.mean(Gw[3:], axis=0)
+        d = aggregators.get_aggregator(name)(Gw, f=3)
+        rel = float(jnp.linalg.norm(d - hm) / jnp.linalg.norm(hm))
+        mean_rel = float(jnp.linalg.norm(aggregators.mean(Gw) - hm)
+                         / jnp.linalg.norm(hm))
+        assert rel < mean_rel, f"{name}: {rel} !< {mean_rel}"
+
+
+if HAVE_HYPOTHESIS:
+    gw_strategy = st.tuples(
+        st.integers(min_value=5, max_value=12),   # p
+        st.integers(min_value=8, max_value=64),   # n
+        st.integers(min_value=0, max_value=123456),
+    )
+
+    class TestProperties:
+        @given(gw_strategy)
+        @settings(max_examples=20, deadline=None)
+        def test_permutation_invariance(self, args):
+            """Aggregators must not care about worker order."""
+            p, n, seed = args
+            r = np.random.default_rng(seed)
+            Gw = jnp.asarray(r.normal(size=(p, n)).astype(np.float32))
+            perm = r.permutation(p)
+            for name in ["mean", "median", "trimmed_mean", "flag", "geomed"]:
+                d1 = aggregators.get_aggregator(name)(Gw, f=1)
+                d2 = aggregators.get_aggregator(name)(Gw[perm], f=1)
+                np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                                           rtol=2e-2, atol=2e-3,
+                                           err_msg=name)
+
+        @given(gw_strategy)
+        @settings(max_examples=20, deadline=None)
+        def test_aggregate_in_convex_hull_coordinatewise(self, args):
+            """Coordinate-wise rules stay within per-coordinate min/max."""
+            p, n, seed = args
+            r = np.random.default_rng(seed)
+            Gw = jnp.asarray(r.normal(size=(p, n)).astype(np.float32))
+            lo, hi = jnp.min(Gw, 0), jnp.max(Gw, 0)
+            for name in ["mean", "median", "trimmed_mean", "meamed", "phocas"]:
+                d = aggregators.get_aggregator(name)(Gw, f=1)
+                assert bool(jnp.all(d >= lo - 1e-5)) and bool(jnp.all(d <= hi + 1e-5)), name
+
+        @given(gw_strategy)
+        @settings(max_examples=15, deadline=None)
+        def test_scale_equivariance_mean_like(self, args):
+            """Scaling all gradients scales the aggregate (homogeneity)."""
+            p, n, seed = args
+            r = np.random.default_rng(seed)
+            Gw = jnp.asarray(r.normal(size=(p, n)).astype(np.float32))
+            for name in ["mean", "median", "flag"]:
+                d1 = aggregators.get_aggregator(name)(Gw, f=1)
+                d2 = aggregators.get_aggregator(name)(3.0 * Gw, f=1)
+                np.testing.assert_allclose(np.asarray(3.0 * d1), np.asarray(d2),
+                                           rtol=3e-2, atol=3e-3, err_msg=name)

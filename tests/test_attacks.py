@@ -1,0 +1,78 @@
+"""Attack library tests."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import attacks
+
+
+@pytest.fixture
+def honest(rng):
+    return jnp.asarray(rng.normal(size=(10, 64)).astype(np.float32))
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestAttacks:
+    def test_none_is_identity(self, honest):
+        out = attacks.apply_attack("none", honest, KEY, f=3)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(honest))
+
+    def test_f_zero_is_identity(self, honest):
+        for name in attacks.ATTACKS:
+            out = attacks.apply_attack(name, honest, KEY, f=0)
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(honest),
+                                          err_msg=name)
+
+    def test_honest_rows_untouched(self, honest):
+        for name in attacks.ATTACKS:
+            out = attacks.apply_attack(name, honest, KEY, f=4)
+            np.testing.assert_array_equal(np.asarray(out[4:]),
+                                          np.asarray(honest[4:]), err_msg=name)
+
+    def test_sign_flip(self, honest):
+        out = attacks.apply_attack("sign_flip", honest, KEY, f=2, scale=10.0)
+        np.testing.assert_allclose(np.asarray(out[:2]),
+                                   -10.0 * np.asarray(honest[:2]), rtol=1e-6)
+
+    def test_zero(self, honest):
+        out = attacks.apply_attack("zero", honest, KEY, f=2)
+        assert float(jnp.abs(out[:2]).max()) == 0.0
+
+    def test_ipm_direction(self, honest):
+        out = attacks.apply_attack("ipm", honest, KEY, f=2, eps=0.1)
+        mu = jnp.mean(honest[2:], axis=0)
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(-0.1 * mu),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_drop_rate(self, honest):
+        out = attacks.apply_attack("drop", honest, KEY, f=10, loss_rate=0.5)
+        frac = float(jnp.mean(out == 0.0))
+        assert 0.3 < frac < 0.7
+
+    def test_alie_within_band(self, honest):
+        out = attacks.apply_attack("alie", honest, KEY, f=2, z=1.5)
+        mu = np.asarray(jnp.mean(honest[2:], axis=0))
+        sd = np.asarray(jnp.std(honest[2:], axis=0))
+        np.testing.assert_allclose(np.asarray(out[0]), mu - 1.5 * sd,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_deterministic(self, honest):
+        a = attacks.apply_attack("random", honest, KEY, f=3)
+        b = attacks.apply_attack("random", honest, KEY, f=3)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_unknown_raises(self, honest):
+        with pytest.raises(KeyError):
+            attacks.apply_attack("nope", honest, KEY, f=1)
+
+    def test_jittable(self, honest):
+        f = jax.jit(lambda g, k: attacks.ATTACKS["random"](
+            g, k, attacks.byzantine_mask(10, 3)))
+        out = f(honest, KEY)
+        assert out.shape == honest.shape

@@ -1,0 +1,143 @@
+"""Unit tests for the Flag Aggregator core (dense reference + Gram form)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (FlagConfig, default_m, flag_aggregate, flag_subspace,
+                        flag_aggregate_gram, fa_weights_from_gram, gram_matrix)
+from repro.core import beta_mle
+from tests.conftest import make_gradient_matrix
+
+jax.config.update("jax_enable_x64", False)
+
+
+class TestBetaMLE:
+    def test_taylor_log_approximates_log(self):
+        x = jnp.linspace(0.05, 1.0, 50)
+        for a in (8.0, 32.0, 128.0):
+            err = jnp.max(jnp.abs(beta_mle.taylor_log(x, a) - jnp.log(x)))
+            assert err < 5.0 / a  # error shrinks like O(1/a)
+
+    def test_paper_default_is_sqrt_loss(self):
+        v = jnp.linspace(0.0, 0.999, 64)
+        t = beta_mle.beta_nll_terms(v, alpha=1.0, beta=0.5, a=2.0)
+        np.testing.assert_allclose(t, jnp.sqrt(1.0 - v), atol=1e-3)
+
+    def test_irls_weights_paper_default(self):
+        v = jnp.array([0.0, 0.5, 0.99])
+        w = beta_mle.irls_weights(v, jnp.ones(3))
+        np.testing.assert_allclose(w, 0.5 / jnp.sqrt(1.0 - v), rtol=1e-5)
+
+    def test_irls_weights_monotone_in_v(self):
+        v = jnp.linspace(0.0, 0.999, 100)
+        w = beta_mle.irls_weights(v, jnp.ones_like(v))
+        assert bool(jnp.all(jnp.diff(w) >= 0))
+
+
+class TestDefaultM:
+    @pytest.mark.parametrize("p,expect", [(15, 8), (7, 4), (60, 31), (2, 2)])
+    def test_paper_formula(self, p, expect):
+        assert default_m(p) == expect
+
+
+class TestFlagSubspace:
+    def test_orthonormal(self, grad_matrix):
+        Y, aux = flag_subspace(jnp.asarray(grad_matrix.T))
+        np.testing.assert_allclose(np.asarray(Y.T @ Y), np.eye(aux["m"]),
+                                   atol=1e-4)
+
+    def test_explained_variance_range(self, grad_matrix):
+        _, aux = flag_subspace(jnp.asarray(grad_matrix.T))
+        v = np.asarray(aux["explained_variance"])
+        assert v.shape == (grad_matrix.shape[0],)
+        assert (v >= 0).all() and (v <= 1 + 1e-6).all()
+
+    def test_m_one_matches_dominant_direction(self, rng):
+        # All workers identical => Y (m=1) must be that direction.
+        g = rng.normal(size=(64,)).astype(np.float32)
+        G = jnp.asarray(np.stack([g] * 6, axis=1))
+        Y, _ = flag_subspace(G, FlagConfig(m=1, lam=0.0, regularizer="none"))
+        cos = abs(float(Y[:, 0] @ g / np.linalg.norm(g)))
+        assert cos > 1 - 1e-5
+
+    def test_converges_within_budget(self, grad_matrix):
+        _, aux = flag_subspace(jnp.asarray(grad_matrix.T), FlagConfig(n_iter=5))
+        assert int(aux["iterations"]) <= 5
+
+
+class TestDenseGramEquivalence:
+    @pytest.mark.parametrize("lam", [0.0, 1.0, 15.0])
+    @pytest.mark.parametrize("mode", ["raw", "clip", "unit"])
+    def test_aggregate_matches(self, rng, lam, mode):
+        Gw = make_gradient_matrix(rng, n=300, p=11, f=2)
+        G = jnp.asarray(Gw.T)
+        cfg = FlagConfig(lam=lam, norm_mode=mode)
+        dd, _ = flag_aggregate(G, cfg)
+        dg, _ = flag_aggregate_gram(G, cfg)
+        scale = float(jnp.max(jnp.abs(dd))) + 1e-30
+        assert float(jnp.max(jnp.abs(dd - dg))) / scale < 5e-3
+
+    def test_weights_reproduce_update(self, grad_matrix):
+        G = jnp.asarray(grad_matrix.T)
+        cfg = FlagConfig(lam=15.0)
+        c, _ = fa_weights_from_gram(gram_matrix(G), cfg)
+        dd, _ = flag_aggregate(G, cfg)
+        np.testing.assert_allclose(np.asarray(G @ c), np.asarray(dd),
+                                   rtol=5e-2, atol=5e-3)
+
+
+class TestRobustness:
+    def test_byzantine_suppressed_clip_mode(self, rng):
+        """Large-norm random Byzantine workers get ~zero combine weight."""
+        Gw = make_gradient_matrix(rng, n=500, p=15, f=3, byz_scale=20.0)
+        cfg = FlagConfig(lam=15.0, norm_mode="clip")
+        c, _ = fa_weights_from_gram(gram_matrix(jnp.asarray(Gw.T)), cfg)
+        c = np.asarray(c)
+        assert np.abs(c[:3]).max() < 0.1 * np.abs(c[3:]).mean()
+
+    def test_aggregate_close_to_honest_mean(self, rng):
+        Gw = make_gradient_matrix(rng, n=500, p=15, f=3, byz_scale=20.0)
+        d, _ = flag_aggregate_gram(jnp.asarray(Gw.T),
+                                   FlagConfig(lam=15.0, norm_mode="clip"))
+        hm = Gw[3:].mean(axis=0)
+        rel = np.linalg.norm(np.asarray(d) - hm) / np.linalg.norm(hm)
+        mean_rel = np.linalg.norm(Gw.mean(axis=0) - hm) / np.linalg.norm(hm)
+        assert rel < 0.5 * mean_rel  # far better than the non-robust mean
+
+    def test_no_byzantine_close_to_mean(self, rng):
+        """f=0, concordant workers: FA approximately returns the mean.
+
+        (Regime note, recorded in EXPERIMENTS.md: with lambda = Theta(p) and
+        *diffuse* worker noise, the p(p-1)/2 pairwise-difference columns can
+        out-mass the p data columns and rotate the subspace into noise space —
+        so the sane default is lambda ~ 1 and worker agreement, which is the
+        paper's own f=0 setting.)"""
+        Gw = make_gradient_matrix(rng, n=400, p=10, f=0, noise=0.005)
+        d, _ = flag_aggregate_gram(jnp.asarray(Gw.T), FlagConfig(lam=1.0))
+        hm = Gw.mean(axis=0)
+        rel = np.linalg.norm(np.asarray(d) - hm) / np.linalg.norm(hm)
+        assert rel < 0.05
+
+
+class TestConfigVariants:
+    def test_l1_regularizer_runs(self, grad_matrix):
+        d, _ = flag_aggregate(jnp.asarray(grad_matrix.T),
+                              FlagConfig(lam=0.5, regularizer="l1"))
+        assert bool(jnp.all(jnp.isfinite(d)))
+
+    def test_general_beta_shapes(self, grad_matrix):
+        G = jnp.asarray(grad_matrix.T)
+        for alpha, beta, a in [(1.0, 0.5, 2.0), (2.0, 0.5, 2.0), (1.0, 0.25, 4.0)]:
+            d, _ = flag_aggregate_gram(G, FlagConfig(alpha=alpha, beta=beta, a=a))
+            assert bool(jnp.all(jnp.isfinite(d)))
+
+    def test_jit_cache_stable(self, grad_matrix):
+        G = jnp.asarray(grad_matrix.T)
+        cfg = FlagConfig()
+        d1, _ = flag_aggregate_gram(G, cfg)
+        d2, _ = flag_aggregate_gram(G * 2.0, cfg)
+        assert d1.shape == d2.shape

@@ -1,0 +1,185 @@
+"""Model-substrate tests: cells, blocks, decode-vs-prefill consistency."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models import ssm, rglru as rglru_lib, layers
+from repro.configs import ARCHS, get_config, reduce_for_smoke
+
+
+def _rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+class TestMLSTM:
+    def test_chunkwise_matches_sequential(self, rng):
+        B, H, S, dk = 2, 3, 64, 16
+        q = _rand(rng, (B, H, S, dk))
+        k = _rand(rng, (B, H, S, dk)) * dk ** -0.5
+        v = _rand(rng, (B, H, S, dk))
+        li = _rand(rng, (B, H, S)) * 0.5
+        lf = jax.nn.log_sigmoid(_rand(rng, (B, H, S)) + 2.0)
+        st = ssm.mlstm_state_init(B, H, dk, dk)
+        h_seq, st_seq = ssm.mlstm_sequential(q, k, v, li, lf, st)
+        for chunk in (8, 16, 64, 256):
+            h_chk, st_chk = ssm.mlstm_parallel(q, k, v, li, lf, st, chunk=chunk)
+            np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_seq),
+                                       rtol=2e-4, atol=2e-4,
+                                       err_msg=f"chunk={chunk}")
+            for a, b in zip(st_chk[:2], st_seq[:2]):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=2e-3, atol=2e-3)
+
+    def test_state_carry_equals_full_sequence(self, rng):
+        """Processing [first half; second half] with carried state == full."""
+        B, H, S, dk = 1, 2, 32, 8
+        args = [_rand(rng, (B, H, S, dk)) for _ in range(3)]
+        li = _rand(rng, (B, H, S)) * 0.3
+        lf = jax.nn.log_sigmoid(_rand(rng, (B, H, S)) + 2.0)
+        st0 = ssm.mlstm_state_init(B, H, dk, dk)
+        h_full, _ = ssm.mlstm_parallel(*args, li, lf, st0, chunk=8)
+        half = S // 2
+        cut4 = lambda t: (t[:, :, :half], t[:, :, half:])
+        (q1, q2), (k1, k2), (v1, v2) = map(cut4, args)
+        (l1, l2), (f1, f2) = cut4(li), cut4(lf)
+        h1, st1 = ssm.mlstm_parallel(q1, k1, v1, l1, f1, st0, chunk=8)
+        h2, _ = ssm.mlstm_parallel(q2, k2, v2, l2, f2, st1, chunk=8)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 2)),
+                                   np.asarray(h_full), rtol=2e-4, atol=2e-4)
+
+
+class TestRGLRU:
+    def test_matches_sequential(self, rng):
+        B, S, d = 2, 24, 16
+        p = rglru_lib.rglru_init(jax.random.PRNGKey(1), d)
+        x = _rand(rng, (B, S, d))
+        y, h_last = rglru_lib.rglru_apply(p, x)
+        # sequential oracle
+        r = jax.nn.sigmoid(layers.linear(p["wr"], x, jnp.float32))
+        i = jax.nn.sigmoid(layers.linear(p["wi"], x, jnp.float32))
+        a = jnp.exp(-8.0 * jax.nn.softplus(p["lam"]) * r)
+        b = jnp.sqrt(jnp.clip(1 - a * a, 1e-12)) * (i * x)
+        h = jnp.zeros((B, d))
+        outs = []
+        for t in range(S):
+            h = a[:, t] * h + b[:, t]
+            outs.append(h)
+        want = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(h_last), np.asarray(want[:, -1]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_state_carry(self, rng):
+        B, S, d = 1, 16, 8
+        p = rglru_lib.rglru_init(jax.random.PRNGKey(2), d)
+        x = _rand(rng, (B, S, d))
+        y_full, _ = rglru_lib.rglru_apply(p, x)
+        y1, h1 = rglru_lib.rglru_apply(p, x[:, :8])
+        y2, _ = rglru_lib.rglru_apply(p, x[:, 8:], h1)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(y_full), rtol=1e-5, atol=1e-5)
+
+
+class TestConv:
+    def test_causal_and_state(self, rng):
+        p = ssm.conv_init(jax.random.PRNGKey(0), 4, 8)
+        x = _rand(rng, (2, 20, 8))
+        y_full, _ = ssm.conv_apply(p, x)
+        y1, st = ssm.conv_apply(p, x[:, :9])
+        y2, _ = ssm.conv_apply(p, x[:, 9:], st)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(y_full), rtol=1e-5, atol=1e-5)
+        # causality: perturbing x_t must not change y_{<t}
+        x2 = x.at[:, 10].add(100.0)
+        y_pert, _ = ssm.conv_apply(p, x2)
+        np.testing.assert_allclose(np.asarray(y_pert[:, :10]),
+                                   np.asarray(y_full[:, :10]), rtol=1e-5)
+
+
+class TestRoPE:
+    def test_norm_preserved(self, rng):
+        x = _rand(rng, (2, 4, 16, 64))
+        pos = jnp.broadcast_to(jnp.arange(16)[None, None], (2, 4, 16))
+        y = layers.apply_rope(x, pos)
+        np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                                   np.asarray(jnp.linalg.norm(x, axis=-1)),
+                                   rtol=1e-4)
+
+    def test_relative_property(self, rng):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        q = _rand(rng, (1, 1, 1, 32))
+        k = _rand(rng, (1, 1, 1, 32))
+        def dot(m, n):
+            qm = layers.apply_rope(q, jnp.full((1, 1, 1), m))
+            kn = layers.apply_rope(k, jnp.full((1, 1, 1), n))
+            return float(jnp.sum(qm * kn))
+        assert abs(dot(5, 3) - dot(10, 8)) < 1e-4
+
+    def test_partial_fraction(self, rng):
+        x = _rand(rng, (1, 1, 4, 64))
+        pos = jnp.broadcast_to(jnp.arange(4)[None, None], (1, 1, 4))
+        y = layers.apply_rope(x, pos, rope_fraction=0.25)
+        np.testing.assert_array_equal(np.asarray(y[..., 16:]),
+                                      np.asarray(x[..., 16:]))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+class TestDecodeConsistency:
+    """Token-by-token decode must match the parallel prefill forward."""
+
+    def test_decode_matches_prefill(self, rng, arch):
+        cfg = reduce_for_smoke(get_config(arch))
+        cfg = cfg.replace(frontend=None, num_prefix_embeds=0)  # token path
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        B, S = 1, 12
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        logits_par = transformer.prefill(params, {"tokens": toks}, cfg)
+
+        caches = transformer.init_caches(cfg, B, max_len=S, dtype=jnp.float32)
+        outs = []
+        for t in range(S):
+            lg, caches = transformer.decode_step(
+                params, toks[:, t:t + 1], caches, jnp.asarray(t, jnp.int32),
+                cfg, max_len=S)
+            outs.append(lg[:, 0])
+        logits_seq = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(logits_seq),
+                                   np.asarray(logits_par),
+                                   rtol=2e-2, atol=2e-2, err_msg=arch)
+
+
+class TestParamCount:
+    def test_full_config_counts(self):
+        """Full configs land near their nameplate sizes."""
+        expect = {
+            "xlstm-1.3b": (1.1e9, 1.8e9),
+            "smollm-360m": (0.30e9, 0.45e9),
+            "mixtral-8x7b": (44e9, 50e9),
+            "starcoder2-15b": (14e9, 17e9),
+            "stablelm-1.6b": (1.4e9, 1.9e9),
+            # 30.3B is exact for the assigned spec (40L, d8192, d_ff 22528,
+            # 256k tied vocab); the "35b" nameplate includes nothing we omit
+            # beyond spec.
+            "command-r-35b": (29e9, 38e9),
+            "deepseek-moe-16b": (15e9, 19e9),
+            "musicgen-medium": (1.3e9, 2.2e9),
+            "recurrentgemma-9b": (7.5e9, 10.5e9),
+            "phi-3-vision-4.2b": (3.6e9, 4.5e9),
+        }
+        for name, (lo, hi) in expect.items():
+            n = get_config(name).param_count()
+            assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+    def test_moe_active_params(self):
+        cfg = get_config("mixtral-8x7b")
+        active = cfg.active_param_count()
+        total = cfg.param_count()
+        assert active < 0.4 * total          # 2/8 experts + attention
+        assert 10e9 < active < 16e9          # ~12.9B nameplate active

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system-level invariants of FA."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pytest.skip("hypothesis not installed", allow_module_level=True)
+
+from repro.core import FlagConfig, flag_aggregate_gram, fa_weights_from_gram
+from repro.core.gram import gram_matrix
+
+CASE = st.tuples(st.integers(5, 12), st.integers(16, 80),
+                 st.integers(0, 99999))
+
+
+def _mat(p, n, seed):
+    r = np.random.default_rng(seed)
+    mu = r.normal(size=n)
+    return jnp.asarray((mu[None] + 0.5 * r.normal(size=(p, n)))
+                       .astype(np.float32))
+
+
+class TestFAInvariants:
+    @given(CASE)
+    @settings(max_examples=15, deadline=None)
+    def test_rotation_equivariance(self, case):
+        """FA commutes with orthogonal rotations of gradient space:
+        FA(Q G) == Q FA(G).  (The subspace estimate is basis-free; the Gram
+        — and hence the combine weights — are rotation invariant.)"""
+        p, n, seed = case
+        Gw = _mat(p, n, seed)
+        r = np.random.default_rng(seed + 1)
+        Q = jnp.asarray(np.linalg.qr(r.normal(size=(n, n)))[0]
+                        .astype(np.float32))
+        cfg = FlagConfig(lam=2.0)
+        d1, _ = flag_aggregate_gram(Gw.T, cfg)
+        d2, _ = flag_aggregate_gram(Q @ Gw.T, cfg)
+        np.testing.assert_allclose(np.asarray(Q @ d1), np.asarray(d2),
+                                   rtol=5e-2, atol=5e-3)
+
+    @given(CASE)
+    @settings(max_examples=15, deadline=None)
+    def test_weights_rotation_invariant(self, case):
+        p, n, seed = case
+        Gw = _mat(p, n, seed)
+        r = np.random.default_rng(seed + 1)
+        Q = jnp.asarray(np.linalg.qr(r.normal(size=(n, n)))[0]
+                        .astype(np.float32))
+        cfg = FlagConfig(lam=2.0)
+        c1, _ = fa_weights_from_gram(gram_matrix(Gw.T), cfg)
+        c2, _ = fa_weights_from_gram(gram_matrix(Q @ Gw.T), cfg)
+        np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
+                                   rtol=2e-2, atol=2e-3)
+
+    @given(CASE)
+    @settings(max_examples=15, deadline=None)
+    def test_explained_variance_bounds(self, case):
+        p, n, seed = case
+        Gw = _mat(p, n, seed)
+        _, aux = fa_weights_from_gram(gram_matrix(Gw.T), FlagConfig(lam=1.0))
+        v = np.asarray(aux["explained_variance"])
+        assert (v >= -1e-5).all() and (v <= 1 + 1e-5).all()
+
+    @given(CASE)
+    @settings(max_examples=10, deadline=None)
+    def test_gram_psd_and_symmetric(self, case):
+        p, n, seed = case
+        Gw = _mat(p, n, seed)
+        K = np.asarray(gram_matrix(Gw.T))
+        np.testing.assert_allclose(K, K.T, rtol=1e-5)
+        assert np.linalg.eigvalsh(K).min() > -1e-2
+
+    @given(CASE)
+    @settings(max_examples=10, deadline=None)
+    def test_aggregate_within_gradient_span(self, case):
+        """d = G c lies in the column span of G (exact by construction in
+        the Gram form — the paper's Y Y^T G 1 need not be, but the
+        aggregation identity puts it there)."""
+        p, n, seed = case
+        Gw = _mat(p, n, seed)
+        d, aux = flag_aggregate_gram(Gw.T, FlagConfig(lam=1.0))
+        # least-squares residual of d against span(G^T)
+        coef, *_ = np.linalg.lstsq(np.asarray(Gw.T), np.asarray(d),
+                                   rcond=None)
+        recon = np.asarray(Gw.T) @ coef
+        rel = np.linalg.norm(recon - np.asarray(d)) / (
+            np.linalg.norm(d) + 1e-30)
+        assert rel < 1e-3

@@ -1,0 +1,94 @@
+"""Config registry + input-spec tests (deliverable f plumbing)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, reduce_for_smoke
+from repro.configs.shapes import SHAPES, input_specs, get_shape
+
+ASSIGNED = {
+    # arch id -> (layers, d_model, heads, kv, d_ff, vocab)
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+    "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+    "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+}
+
+
+class TestRegistry:
+    def test_all_ten_assigned(self):
+        assert set(ARCHS) == set(ASSIGNED)
+
+    @pytest.mark.parametrize("name", sorted(ASSIGNED))
+    def test_exact_assigned_numbers(self, name):
+        L, d, h, kv, ff, v = ASSIGNED[name]
+        c = get_config(name)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, h, kv, ff, v)
+
+    def test_moe_settings(self):
+        mx = get_config("mixtral-8x7b").moe
+        assert (mx.num_experts, mx.top_k) == (8, 2)
+        ds = get_config("deepseek-moe-16b").moe
+        assert (ds.num_experts, ds.top_k, ds.num_shared) == (64, 6, 2)
+
+    def test_tp_dims_divisible_by_model_axis(self):
+        """Every Megatron-TP dim divides the 16-way model axis."""
+        for c in ARCHS.values():
+            assert c.d_model % 16 == 0 or c.d_model == 960  # smollm: qkv dim
+            assert (c.num_heads * c.head_dim) % 16 == 0
+            assert c.vocab_size % 16 == 0
+            if c.d_ff:
+                assert c.d_ff % 16 == 0
+
+    @pytest.mark.parametrize("name", sorted(ASSIGNED))
+    def test_smoke_reduction_bounds(self, name):
+        c = reduce_for_smoke(get_config(name))
+        assert c.num_layers <= 3
+        assert c.d_model <= 512
+        if c.moe:
+            assert c.moe.num_experts <= 4
+
+
+class TestShapes:
+    def test_four_assigned_shapes(self):
+        want = {"train_4k": (4096, 256, "train"),
+                "prefill_32k": (32768, 32, "prefill"),
+                "decode_32k": (32768, 128, "decode"),
+                "long_500k": (524288, 1, "decode")}
+        assert set(SHAPES) == set(want)
+        for k, (s, b, kind) in want.items():
+            sh = get_shape(k)
+            assert (sh.seq_len, sh.global_batch, sh.kind) == (s, b, kind)
+
+    def test_train_specs_have_worker_axis(self):
+        cfg = get_config("smollm-360m")
+        sp = input_specs(cfg, get_shape("train_4k"), workers=16)
+        assert sp["tokens"].shape == (16, 16, 4096)
+        assert sp["labels"].dtype == jnp.int32
+
+    def test_vlm_specs_include_patch_embeddings(self):
+        cfg = get_config("phi-3-vision-4.2b")
+        sp = input_specs(cfg, get_shape("prefill_32k"))
+        assert sp["prefix_embeds"].shape == (32, 256, 1024)
+        # token length shrinks by the patch prefix so total seq is 32768
+        assert sp["tokens"].shape == (32, 32768 - 256)
+
+    def test_decode_specs(self):
+        cfg = get_config("mixtral-8x7b")
+        sp = input_specs(cfg, get_shape("decode_32k"))
+        assert sp["tokens"].shape == (128, 1)
+        assert sp["step"].shape == ()
+
+    def test_audio_specs(self):
+        cfg = get_config("musicgen-medium")
+        sp = input_specs(cfg, get_shape("train_4k"), workers=32)
+        assert sp["prefix_embeds"].shape == (32, 8, 64, 768)

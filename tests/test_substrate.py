@@ -1,0 +1,161 @@
+"""Substrate tests: data, augmentations, optimizers, schedules, checkpoint."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.synthetic import SyntheticImages, SyntheticLM
+from repro.data import augment
+from repro.data.pipeline import WorkerDataConfig, lm_worker_batches
+from repro.optim import sgd, adamw, step_decay, cosine, warmup_cosine
+from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step
+
+
+class TestSyntheticImages:
+    def test_deterministic(self):
+        a = SyntheticImages(seed=3).sample(jax.random.PRNGKey(0), 8)
+        b = SyntheticImages(seed=3).sample(jax.random.PRNGKey(0), 8)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+    def test_range_and_shapes(self):
+        x, y = SyntheticImages().sample(jax.random.PRNGKey(1), 16)
+        assert x.shape == (16, 32, 32, 3)
+        assert float(x.min()) >= 0.0 and float(x.max()) <= 1.0
+        assert int(y.min()) >= 0 and int(y.max()) < 10
+
+    def test_learnable(self):
+        """Templates are separable: nearest-template classification works."""
+        task = SyntheticImages(noise=0.15)
+        x, y = task.sample(jax.random.PRNGKey(2), 256)
+        t = task.templates.reshape(10, -1)
+        d = jnp.linalg.norm(x.reshape(256, -1)[:, None] - t[None], axis=-1)
+        acc = float(jnp.mean(jnp.argmin(d, -1) == y))
+        assert acc > 0.9
+
+
+class TestSyntheticLM:
+    def test_deterministic_and_learnable_structure(self):
+        task = SyntheticLM(vocab_size=128, seed=1)
+        b1 = task.batch(jax.random.PRNGKey(0), 4, 32)
+        b2 = task.batch(jax.random.PRNGKey(0), 4, 32)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+        # labels are one of <=branch successors of the current token
+        succ = np.asarray(task._succ(b1["tokens"]))
+        lab = np.asarray(b1["labels"])[..., None]
+        assert bool(np.all(np.any(succ == lab, axis=-1)))
+
+    def test_worker_batches_shapes(self):
+        task = SyntheticLM(vocab_size=64)
+        wdc = WorkerDataConfig(workers=3, per_worker_batch=2)
+        b = lm_worker_batches(task, wdc, step=0, seq_len=16)
+        assert b["tokens"].shape == (3, 2, 16)
+        # workers see different data
+        assert not np.array_equal(np.asarray(b["tokens"][0]),
+                                  np.asarray(b["tokens"][1]))
+
+
+class TestAugment:
+    @pytest.fixture
+    def imgs(self, rng):
+        return jnp.asarray(rng.uniform(0, 1, size=(4, 32, 32, 3)),
+                           jnp.float32)
+
+    def test_lotka_volterra_range_and_nonlinearity(self, imgs):
+        out = augment.lotka_volterra(imgs)
+        assert out.shape == imgs.shape
+        assert float(out.min()) >= 0 and float(out.max()) <= 1
+        # nonlinear: not an affine map of the input
+        out2 = augment.lotka_volterra(0.5 * imgs)
+        assert float(jnp.max(jnp.abs(out2 - 0.5 * out))) > 1e-3
+
+    def test_cat_map_is_permutation(self, imgs):
+        out = augment.cat_map(imgs)
+        np.testing.assert_allclose(np.sort(np.asarray(out).ravel()),
+                                   np.sort(np.asarray(imgs).ravel()),
+                                   rtol=1e-6)
+
+    def test_cat_map_periodicity(self, imgs):
+        """Arnold's cat map on a 32x32 grid has a small period (<=24)."""
+        out = imgs
+        for _ in range(24):
+            out = augment.cat_map(out)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(imgs),
+                                   rtol=1e-6)
+
+    def test_smooth_cat_map_runs(self, imgs):
+        out = augment.smooth_cat_map(imgs)
+        assert out.shape == imgs.shape
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_rk4_accuracy_exponential(self):
+        """RK4 on dx/dt = -x matches exp to ~1e-6 at dt=1/16."""
+        field = lambda s: (-s[0], -s[1])
+        x0 = (jnp.ones(()), jnp.full((), 2.0))
+        out = augment.rk4(field, x0, 1.0 / 16, 16)
+        np.testing.assert_allclose(float(out[0]), np.exp(-1.0), rtol=1e-6)
+
+
+class TestOptim:
+    def _quad(self, params):
+        return sum(jnp.sum(p ** 2) for p in jax.tree.leaves(params))
+
+    @pytest.mark.parametrize("make", [lambda: sgd(momentum=0.9),
+                                      lambda: adamw(weight_decay=0.0)])
+    def test_converges_on_quadratic(self, make):
+        opt = make()
+        params = {"a": jnp.ones((4,)), "b": jnp.full((2, 2), -2.0)}
+        state = opt.init(params)
+        for _ in range(200):
+            g = jax.grad(self._quad)(params)
+            upd, state = opt.update(g, state, params, 0.05)
+            params = jax.tree.map(lambda p, u: p + u, params, upd)
+        assert float(self._quad(params)) < 1e-3
+
+    def test_schedules(self):
+        s = step_decay(1.0, decay=0.2, every=10)
+        assert float(s(jnp.asarray(0))) == 1.0
+        np.testing.assert_allclose(float(s(jnp.asarray(10))), 0.2)
+        c = cosine(1.0, 100)
+        assert float(c(jnp.asarray(0))) == 1.0
+        assert float(c(jnp.asarray(100))) == pytest.approx(0.1)
+        w = warmup_cosine(1.0, 100, warmup=10)
+        assert float(w(jnp.asarray(0))) == 0.0
+        assert float(w(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-2)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, rng):
+        tree = {"p": {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+                      "b": jnp.asarray(rng.normal(size=(3,)), jnp.bfloat16)},
+                "step": jnp.asarray(7, jnp.int32)}
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 42, tree)
+            restored, step = load_checkpoint(d, tree)
+            assert step == 42
+            for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+                np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                              np.asarray(b, np.float32))
+
+    def test_latest_step(self, rng):
+        tree = {"x": jnp.zeros((2,))}
+        with tempfile.TemporaryDirectory() as d:
+            assert latest_step(d) is None
+            save_checkpoint(d, 1, tree)
+            save_checkpoint(d, 5, tree)
+            assert latest_step(d) == 5
+            _, step = load_checkpoint(d, tree)
+            assert step == 5
+
+    def test_shape_mismatch_raises(self, rng):
+        tree = {"x": jnp.zeros((2,))}
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 1, tree)
+            with pytest.raises(ValueError):
+                load_checkpoint(d, {"x": jnp.zeros((3,))})

@@ -29,6 +29,7 @@ __all__ = [
     "mean", "median", "trimmed_mean", "meamed", "phocas", "krum",
     "multi_krum", "bulyan", "pca_topm", "geometric_median", "flag",
     "get_aggregator", "AGGREGATORS", "pairwise_sq_dists", "krum_scores",
+    "mean_around", "bulyan_select", "sq_dists_from_gram",
 ]
 
 
@@ -54,8 +55,13 @@ def trimmed_mean(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
     return jnp.mean(s[k:p - k], axis=0) if k > 0 else jnp.mean(s, axis=0)
 
 
-def _mean_around(Gw: jnp.ndarray, center: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Mean of the k values closest to ``center``, per coordinate."""
+def mean_around(Gw: jnp.ndarray, center: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Mean of the k values closest to ``center``, per coordinate.
+
+    Public: the distributed tree aggregation (``repro.dist.aggregation``)
+    applies this per leaf — coordinate-wise rules commute with the pytree
+    split, so leafwise == flat exactly.
+    """
     d = jnp.abs(Gw - center[None, :])
     # top-k smallest distances per coordinate via sort of (distance, value)
     order = jnp.argsort(d, axis=0)
@@ -66,24 +72,28 @@ def _mean_around(Gw: jnp.ndarray, center: jnp.ndarray, k: int) -> jnp.ndarray:
 def meamed(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
     """Mean-around-median [Xie et al. 2018]: mean of p-f closest to median."""
     p = Gw.shape[0]
-    return _mean_around(Gw, jnp.median(Gw, axis=0), max(p - f, 1))
+    return mean_around(Gw, jnp.median(Gw, axis=0), max(p - f, 1))
 
 
 def phocas(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
     """Phocas [Xie et al. 2018]: mean of p-f closest to the trimmed mean."""
     p = Gw.shape[0]
-    return _mean_around(Gw, trimmed_mean(Gw, f=f), max(p - f, 1))
+    return mean_around(Gw, trimmed_mean(Gw, f=f), max(p - f, 1))
 
 
 # ---------------------------------------------------------------------------
 # distance-based rules (Gram-computable: scalable on the pod)
 # ---------------------------------------------------------------------------
 
-def pairwise_sq_dists(Gw: jnp.ndarray) -> jnp.ndarray:
-    """(p, p) squared distances from the Gram matrix (single O(n p^2) pass)."""
-    K = gram_matrix(Gw.T)
+def sq_dists_from_gram(K: jnp.ndarray) -> jnp.ndarray:
+    """(p, p) squared pairwise distances from a Gram matrix K = G G^T."""
     dg = jnp.diag(K)
     return jnp.clip(dg[:, None] + dg[None, :] - 2.0 * K, 0.0)
+
+
+def pairwise_sq_dists(Gw: jnp.ndarray) -> jnp.ndarray:
+    """(p, p) squared distances from the Gram matrix (single O(n p^2) pass)."""
+    return sq_dists_from_gram(gram_matrix(Gw.T))
 
 
 def krum_scores(D2: jnp.ndarray, f: int) -> jnp.ndarray:
@@ -111,16 +121,15 @@ def multi_krum(Gw: jnp.ndarray, *, f: int = 1, q: int | None = None, **_):
     return jnp.mean(Gw[idx], axis=0)
 
 
-def bulyan(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
-    """Bulyan [El Mhamdi et al. 2018]: recursive Multi-Krum selection of
-    theta = p - 2f gradients, then per-coordinate mean of the beta =
-    theta - 2f values closest to the median (strong resilience needs
-    p >= 4f + 3)."""
-    p = Gw.shape[0]
-    theta = max(p - 2 * f, 1)
-    beta = max(theta - 2 * f, 1)
+def bulyan_select(D2_all: jnp.ndarray, f: int) -> jnp.ndarray:
+    """Bulyan's recursive Multi-Krum selection: theta = p - 2f worker
+    indices picked lowest-Krum-score-first from squared pairwise distances.
 
-    D2_all = pairwise_sq_dists(Gw)
+    Distance-only, so the distributed runtime runs the identical selection
+    from the tree Gram matrix without touching gradient payloads.
+    """
+    p = D2_all.shape[0]
+    theta = max(p - 2 * f, 1)
     # Masked-out distances must dominate every real distance, but stay small
     # enough that  (count_masked * big + real_part)  still resolves real_part
     # in fp32 — each selection round includes the same number of masked
@@ -138,8 +147,20 @@ def bulyan(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
 
     avail = jnp.ones((p,), bool)
     _, picks = jax.lax.scan(select_one, avail, None, length=theta)
+    return picks
+
+
+def bulyan(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
+    """Bulyan [El Mhamdi et al. 2018]: recursive Multi-Krum selection of
+    theta = p - 2f gradients, then per-coordinate mean of the beta =
+    theta - 2f values closest to the median (strong resilience needs
+    p >= 4f + 3)."""
+    p = Gw.shape[0]
+    theta = max(p - 2 * f, 1)
+    beta = max(theta - 2 * f, 1)
+    picks = bulyan_select(pairwise_sq_dists(Gw), f)
     S = Gw[picks]                                      # (theta, n)
-    return _mean_around(S, jnp.median(S, axis=0), beta)
+    return mean_around(S, jnp.median(S, axis=0), beta)
 
 
 # ---------------------------------------------------------------------------

@@ -109,11 +109,6 @@ def _top_m_left_singular(Mw: jnp.ndarray, m: int) -> jnp.ndarray:
     return U[:, :m]
 
 
-def _l1_subgradient_penalty(Y: jnp.ndarray, lam: float) -> jnp.ndarray:
-    """Elementwise-L1 'mathematical norm' regularizer gradient (option (1))."""
-    return lam * jnp.sign(Y)
-
-
 @partial(jax.jit, static_argnames=("cfg",))
 def flag_subspace(G: jnp.ndarray, cfg: FlagConfig = FlagConfig()):
     """Run IRLS; return (Y, aux) with Y in R^{n x m}, Y^T Y = I.

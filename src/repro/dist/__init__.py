@@ -1,0 +1,22 @@
+"""Distribution layer: logical-axis sharding, worker-major tree aggregation,
+and the jit-able train / serve steps.
+
+Modules (imported in dependency order — ``sharding`` has no repro deps, the
+model substrate imports it, and ``train_step``/``serve_step`` sit on top of
+the models):
+
+  sharding     — ``shard`` logical-axis constraints + ``use_sharding`` context
+  aggregation  — ``aggregate_tree``: Byzantine-robust pytree aggregation that
+                 routes FA (and every Gram-computable baseline) through the
+                 p x p Gram matrix, never materializing the flat (W, n) stack
+  train_step   — vmapped per-worker grads -> attack injection -> aggregation
+                 -> optimizer update, as one pure function
+  serve_step   — one-token greedy decode step + the batched decode loop
+"""
+
+from repro.dist import sharding
+from repro.dist import aggregation
+from repro.dist import train_step
+from repro.dist import serve_step
+
+__all__ = ["sharding", "aggregation", "train_step", "serve_step"]

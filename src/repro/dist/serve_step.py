@@ -1,0 +1,74 @@
+"""Serving steps: prefill, one-token greedy decode, and the decode loop.
+
+``build_serve_step`` returns the single jit-able unit of the serving path:
+one token in, one greedy token out, KV/recurrent caches threaded through.
+The cache layout is whatever :func:`repro.models.transformer.init_caches`
+produced — a ring buffer of size ``window`` for sliding-window archs, the
+full ``max_len`` otherwise — and is *static* per compilation, so the same
+step function serves every position (the scalar ``step`` counter is the
+only thing that changes).
+
+``decode_loop`` is the batched driver used by ``examples/serve_decode.py``:
+it feeds the prompt token-by-token through the same step function (so the
+compiled program is identical for prefill-by-decode and generation — one
+compilation per (arch, batch, max_len)), then generates greedily.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+__all__ = ["build_prefill_step", "build_serve_step", "decode_loop"]
+
+
+def build_prefill_step(cfg: ModelConfig, *, attn_impl: str = "xla"):
+    """-> ``prefill(params, batch) -> logits (B, S, V)`` (request scoring)."""
+
+    def prefill_step(params, batch):
+        return transformer.prefill(params, batch, cfg, attn_impl=attn_impl)
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, *, max_len: int):
+    """-> ``serve(params, caches, tokens (B,1), step ()) ->
+    (next_tokens (B,1) int32, caches)`` — greedy argmax decode."""
+
+    def serve_step(params, caches, tokens, step):
+        logits, caches = transformer.decode_step(params, tokens, caches,
+                                                 step, cfg, max_len=max_len)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    return serve_step
+
+
+def decode_loop(params, cfg: ModelConfig, prompts, *, num_steps: int,
+                max_len: int, cache_dtype=jnp.float32):
+    """Greedy generation: consume ``prompts (B, S)``, emit ``(B, num_steps)``.
+
+    The prompt is consumed through the same compiled serve step used for
+    generation (lockstep batch decoding; prompt logits are discarded except
+    the last, which seeds the first generated token).
+    """
+    B, S = prompts.shape
+    if S + num_steps > max_len:
+        raise ValueError(f"prompt ({S}) + generation ({num_steps}) exceeds "
+                         f"max_len={max_len}")
+    caches = transformer.init_caches(cfg, B, max_len, cache_dtype)
+    step_fn = jax.jit(build_serve_step(cfg, max_len=max_len))
+
+    tok = prompts[:, :1]
+    for t in range(S):
+        tok, caches = step_fn(params, caches, prompts[:, t:t + 1],
+                              jnp.asarray(t, jnp.int32))
+    out = []
+    for t in range(S, S + num_steps):
+        out.append(tok)
+        tok, caches = step_fn(params, caches, tok,
+                              jnp.asarray(t, jnp.int32))
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,162 @@
+"""Logical-axis sharding: mesh-agnostic annotations for model code.
+
+Model code never names mesh axes.  It annotates values with *logical* axes
+(``shard(x, ("sub_batch", "seq", "embed"))``); a launcher activates a mesh
+plus a logical->mesh translation with :func:`use_sharding`, and every
+annotation becomes a GSPMD sharding constraint.  Outside any context —
+single-host tests, CPU smoke runs, benchmarks — ``shard`` is the identity,
+so the exact same model code runs everywhere.
+
+Resolution rules (in priority order):
+
+  1. ``None`` logical entries and names missing from the rule set resolve to
+     unconstrained dimensions.
+  2. A rule value may be a mesh-axis name, a tuple of mesh axes (the dim is
+     sharded over their product, e.g. ``worker -> ("pod", "data")``), or
+     ``None`` (explicitly replicated).
+  3. A mesh axis is consumed at most once per value (GSPMD forbids reuse);
+     later dimensions that map to an already-used axis stay unconstrained —
+     this is what makes annotations like ``("embed", "embed")`` legal.
+  4. A dimension whose size does not divide the mapped axis product stays
+     unconstrained rather than erroring, so reduced smoke configs lower
+     under production rule sets.
+
+``DEFAULT_RULES`` encodes the production 16x16 (data, model) layout:
+Megatron-style tensor parallelism on ``model`` for every contraction dim,
+FA workers / batch on the data axes.  ``use_sharding(mesh, overrides)``
+starts from these defaults (widening worker/batch to ``(pod, data)`` when
+the mesh has a pod axis) and applies per-arch overrides on top — see
+``launch.dryrun.rules_for`` for the per-arch derivations.
+"""
+
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from contextvars import ContextVar
+from dataclasses import dataclass
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["shard", "use_sharding", "current_mesh", "current_rules",
+           "logical_spec", "DEFAULT_RULES"]
+
+
+# Logical axis vocabulary (the full set the model substrate annotates with):
+#   worker      — the FA worker axis of worker-major batches / gradients
+#   batch       — global data batch (training inputs)
+#   sub_batch   — per-worker batch inside the vmapped loss
+#   seq / cache_seq — sequence and KV-cache length
+#   embed       — d_model residual stream
+#   vocab       — embedding / unembedding vocabulary dim
+#   mlp / qkv   — FFN hidden and attention projection contraction dims
+#   heads / kv_heads / head_dim — attention head layout
+#   experts / expert_mlp — MoE expert bank layout (EP vs TP)
+#   state       — recurrent-cell widths (rglru / xLSTM)
+DEFAULT_RULES: dict[str, Any] = {
+    "worker": ("data",),
+    "batch": ("data",),
+    "sub_batch": None,
+    "seq": None,
+    "cache_seq": None,
+    "embed": None,
+    "vocab": "model",
+    "mlp": "model",
+    "qkv": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": None,
+    "expert_mlp": "model",
+    "state": "model",
+}
+
+
+@dataclass(frozen=True)
+class _ShardCtx:
+    mesh: Mesh
+    rules: Mapping[str, Any]
+
+
+_CTX: ContextVar[_ShardCtx | None] = ContextVar("repro_shard_ctx",
+                                                default=None)
+
+
+def current_mesh() -> Mesh | None:
+    ctx = _CTX.get()
+    return ctx.mesh if ctx else None
+
+
+def current_rules() -> Mapping[str, Any] | None:
+    ctx = _CTX.get()
+    return ctx.rules if ctx else None
+
+
+@contextmanager
+def use_sharding(mesh: Mesh, rules: Mapping[str, Any] | None = None):
+    """Activate ``mesh`` + logical rules for every ``shard`` call inside.
+
+    ``rules`` override :data:`DEFAULT_RULES` per logical name.  On meshes
+    with a ``pod`` axis the worker/batch defaults widen to ``(pod, data)``
+    (the multi-pod FA worker axis) before overrides apply.
+    """
+    resolved = dict(DEFAULT_RULES)
+    if "pod" in mesh.shape:
+        resolved["worker"] = ("pod", "data")
+        resolved["batch"] = ("pod", "data")
+    if rules:
+        resolved.update(rules)
+    token = _CTX.set(_ShardCtx(mesh, resolved))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def _as_axis_tuple(mapped: Any) -> tuple[str, ...]:
+    if mapped is None:
+        return ()
+    if isinstance(mapped, str):
+        return (mapped,)
+    return tuple(mapped)
+
+
+def logical_spec(shape: Sequence[int], axes: Sequence[str | None],
+                 mesh: Mesh, rules: Mapping[str, Any]) -> P:
+    """Translate logical ``axes`` to a PartitionSpec under ``rules``.
+
+    Applies the resolution rules documented in the module docstring
+    (unknown -> unconstrained, one use per mesh axis, divisibility guard).
+    """
+    if len(axes) != len(shape):
+        raise ValueError(f"logical axes {tuple(axes)} do not match "
+                         f"rank-{len(shape)} value of shape {tuple(shape)}")
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, name in zip(shape, axes):
+        mapped = rules.get(name) if name is not None else None
+        axs = tuple(a for a in _as_axis_tuple(mapped)
+                    if a in mesh.shape and a not in used)
+        size = math.prod(mesh.shape[a] for a in axs) if axs else 1
+        if axs and size > 1 and dim % size == 0:
+            entries.append(axs if len(axs) > 1 else axs[0])
+            used.update(axs)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def shard(x, axes: Sequence[str | None]):
+    """Constrain ``x`` to the active mesh along logical ``axes``.
+
+    Identity when no :func:`use_sharding` context is active (single-host
+    tests / CPU benchmarks), so model code is unconditionally annotated.
+    """
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    spec = logical_spec(x.shape, axes, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))

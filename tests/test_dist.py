@@ -54,7 +54,7 @@ class TestTreeAlgebra:
 
 @pytest.mark.parametrize("name", ["mean", "flag", "pca", "median",
                                   "trimmed_mean", "meamed", "phocas",
-                                  "krum", "multi_krum", "bulyan"])
+                                  "krum", "multi_krum", "bulyan", "geomed"])
 class TestTreeVsFlatAggregators:
     def test_equivalence(self, rng, name):
         """Tree aggregation == flat aggregation of the concatenated matrix."""

@@ -3,16 +3,21 @@
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:
-    pytest.skip("hypothesis not installed", allow_module_level=True)
+    # Hermetic environments: seeded fallback generator (no shrinking) so the
+    # property suite still runs; CI installs real hypothesis
+    # (requirements-test.txt).
+    from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core import FlagConfig, flag_aggregate_gram, fa_weights_from_gram
+from repro.core import (FlagConfig, flag_aggregate, flag_aggregate_gram,
+                        fa_weights_from_gram)
 from repro.core.gram import gram_matrix
+from repro.dist.aggregation import AggregatorConfig, aggregate_tree
 
 CASE = st.tuples(st.integers(5, 12), st.integers(16, 80),
                  st.integers(0, 99999))
@@ -74,6 +79,41 @@ class TestFAInvariants:
         K = np.asarray(gram_matrix(Gw.T))
         np.testing.assert_allclose(K, K.T, rtol=1e-5)
         assert np.linalg.eigvalsh(K).min() > -1e-2
+
+    @given(st.tuples(st.integers(5, 10), st.integers(1, 4),
+                     st.integers(0, 99999)))
+    @settings(max_examples=10, deadline=None)
+    def test_tree_aggregation_matches_flat_reference(self, case):
+        """The tree-algebra invariant, generatively: over randomized pytree
+        shapes and worker counts, ``aggregate_tree`` on a worker-major
+        pytree == dense ``flag_aggregate`` on the concatenated (n, W)
+        matrix (Gram additivity + combine linearity + Gram-vs-dense IRLS
+        equivalence, composed)."""
+        W, n_leaves, seed = case
+        r = np.random.default_rng(seed)
+        mu_scale = 1.0 + 0.5 * r.random()
+        leaves = []
+        for _ in range(n_leaves):
+            shape = tuple(int(r.integers(2, 9))
+                          for _ in range(int(r.integers(1, 4))))
+            mu = r.normal(size=shape) * mu_scale
+            leaves.append(jnp.asarray(
+                (mu[None] + 0.5 * r.normal(size=(W,) + shape))
+                .astype(np.float32)))
+        tree = {f"leaf{i}": x for i, x in enumerate(leaves)}
+        flat = jnp.concatenate([x.reshape(W, -1)
+                                for x in jax.tree.leaves(tree)], axis=1)
+
+        cfg = FlagConfig(lam=2.0)
+        d_tree, aux = aggregate_tree(tree, AggregatorConfig(name="flag",
+                                                            flag=cfg))
+        got = np.concatenate([np.asarray(x).reshape(-1)
+                              for x in jax.tree.leaves(d_tree)])
+        want, _ = flag_aggregate(flat.T, cfg)
+        scale = np.linalg.norm(np.asarray(want)) + 1e-6
+        np.testing.assert_allclose(got / scale, np.asarray(want) / scale,
+                                   rtol=5e-3, atol=5e-4)
+        assert aux["weights"].shape == (W,)
 
     @given(CASE)
     @settings(max_examples=10, deadline=None)

@@ -1,0 +1,125 @@
+"""Attack-matrix train-step tests: every threat model in
+``repro.core.attacks`` x {flag, krum, mean}, asserting the step stays
+finite and honest workers dominate the aggregated update.
+
+Regime: all workers receive the *same* SyntheticLM batch (lockstep), so
+honest gradients coincide and each attack is a pure displacement — the
+concentration setting the paper's robustness analysis assumes (honest
+gradients agree; Byzantine ones deviate).  Dominance is asserted on the
+``worker_influence`` metric (each worker's normalized share of the
+aggregated update's L2 mass, |c_i| * ||g_i||): raw combine weights c are
+paper-faithful but misleading under degenerate norms (a zero-gradient
+worker has huge c yet zero contribution).
+
+Known, literature-documented exceptions are asserted as such rather than
+papered over:
+
+* krum x alie — ALIE [Baruch et al. 2019] stays inside the honest
+  variance envelope; in the lockstep regime (zero honest variance) the
+  Byzantine gradient *equals* the honest one, ties all Krum scores, and
+  argmin picks worker 0.  The attack is a no-op, so only finiteness is
+  meaningful.
+* mean under large-norm attacks — mean is the non-robust baseline
+  (paper Fig. 2); its uniform combine weights are asserted (metric
+  plumbing), not influence dominance, which genuinely fails under e.g.
+  sign_flip — that contrast is FA's selling point.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks
+from repro.core.flag import FlagConfig
+from repro.data.synthetic import SyntheticLM
+from repro.dist.aggregation import AggregatorConfig
+from repro.dist.train_step import (TrainConfig, build_train_step,
+                                   init_train_state)
+from repro.models.config import ModelConfig
+from repro.optim import sgd, constant
+
+W, B, S, F = 6, 4, 32, 2
+
+CFG = ModelConfig(name="tiny-attack", arch_type="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=128, compute_dtype="float32")
+
+ATTACK_NAMES = sorted(a for a in attacks.ATTACKS if a != "none")
+
+
+@pytest.fixture(scope="module")
+def lockstep_batch():
+    one = SyntheticLM(vocab_size=CFG.vocab_size).batch(
+        jax.random.PRNGKey(7), B, S)
+    return {k: jnp.broadcast_to(v[None], (W,) + v.shape)
+            for k, v in one.items()}
+
+
+@pytest.fixture(scope="module")
+def train_state():
+    return init_train_state(jax.random.PRNGKey(0), CFG, sgd(momentum=0.9))
+
+
+def _run_step(train_state, batch, agg_name, attack):
+    params, opt_state = train_state
+    tc = TrainConfig(
+        aggregator=AggregatorConfig(name=agg_name, f=F,
+                                    flag=FlagConfig(lam=float(W))),
+        attack=attack, attack_f=F)
+    step = jax.jit(build_train_step(CFG, tc, sgd(momentum=0.9),
+                                    constant(1e-3)))
+    p1, _, m = step(params, opt_state, batch, jax.random.PRNGKey(100),
+                    jnp.zeros((), jnp.int32))
+    return p1, m
+
+
+def _assert_finite_step(p1, m):
+    assert bool(jnp.isfinite(m["loss"]))
+    assert bool(jnp.isfinite(m["grad_global_norm"]))
+    assert m["fa_weights"].shape == (W,)
+    assert bool(jnp.all(jnp.isfinite(m["worker_influence"])))
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in jax.tree.leaves(p1))
+
+
+@pytest.mark.parametrize("attack", ATTACK_NAMES)
+class TestFlagUnderAttack:
+    def test_finite_and_honest_dominate(self, lockstep_batch, train_state,
+                                        attack):
+        p1, m = _run_step(train_state, lockstep_batch, "flag", attack)
+        _assert_finite_step(p1, m)
+        infl = np.asarray(m["worker_influence"])
+        assert infl[F:].sum() > infl[:F].sum(), \
+            f"honest influence {infl[F:].sum():.3f} <= byzantine " \
+            f"{infl[:F].sum():.3f} under {attack}"
+
+
+@pytest.mark.parametrize("attack", ATTACK_NAMES)
+class TestKrumUnderAttack:
+    def test_finite_and_selects_honest(self, lockstep_batch, train_state,
+                                       attack):
+        p1, m = _run_step(train_state, lockstep_batch, "krum", attack)
+        _assert_finite_step(p1, m)
+        if attack == "alie":
+            # ALIE degenerates to a no-op in the lockstep regime (byz ==
+            # honest gradient): selection ties are meaningless.  The real
+            # krum-vs-ALIE failure is covered by the flag dominance above.
+            return
+        sel = int(np.argmax(np.abs(np.asarray(m["fa_weights"]))))
+        assert sel >= F, f"krum selected Byzantine worker {sel} under {attack}"
+        infl = np.asarray(m["worker_influence"])
+        assert infl[F:].sum() > infl[:F].sum()
+
+
+@pytest.mark.parametrize("attack", ATTACK_NAMES)
+class TestMeanUnderAttack:
+    def test_finite_and_uniform_weights(self, lockstep_batch, train_state,
+                                        attack):
+        p1, m = _run_step(train_state, lockstep_batch, "mean", attack)
+        _assert_finite_step(p1, m)
+        w = np.abs(np.asarray(m["fa_weights"]))
+        np.testing.assert_allclose(w, np.full((W,), 1.0 / W), rtol=1e-6)
+        assert w[F:].sum() > w[:F].sum()

@@ -1,25 +1,54 @@
-"""Paper Fig. 6a: tolerance to communication loss (10% dropped gradients
-on f=3 links, netem-style), plus Figs. 6b-d: marginal utility of extra
-workers at fixed noise.
+"""Communication efficiency under attack: codec x aggregator x attack.
+
+The paper's headline claim is robustness *and* communication efficiency at
+once; this benchmark measures the trade-off directly.  Every cell trains
+the CNN task through ``repro.dist.aggregation.compressed_aggregate`` (the
+same codec bridge the pod train step uses) and reports final accuracy next
+to the codec's exact bits-saved ratio, so the derived column reads as a
+bits-saved vs. accuracy curve per (aggregator, attack).
+
+Rows are named ``comm/<codec>/<aggregator>/<attack>`` and are picked up by
+``benchmarks/fill_experiments.py`` into the ``<!-- COMM_TABLE -->``
+placeholder of EXPERIMENTS.md.  The paper's Fig. 6a operating point
+(10% netem-style loss on f=3 links) is the ``drop`` attack column; the
+Figs. 6b-d marginal-utility-of-workers sweep lives in
+``benchmarks/scalability.py`` territory and keeps its historical rows here
+under ``more_workers/`` so older EXPERIMENTS tables keep regenerating.
 """
 
 from __future__ import annotations
 
 from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
 
+CODECS = (
+    ("none", {}),          # dense fp32 reference
+    ("signsgd", {}),       # 1 bit/coord + per-row scale, EF on
+    ("topk", {}),          # 1/16 of coords as (index, value), EF on
+    ("countsketch", {}),   # Gram-feeding sketch, ratio 1/16
+)
+
 
 def run(steps: int = 100):
     rows = [("name", "us_per_call", "derived")]
-    # Fig 6a: 10% loss on 3 links
-    for agg in (("flag", "multi_krum", "mean") if steps <= 20 else ("flag", "multi_krum", "bulyan", "mean", "median")):
-        cfg = ByzRunConfig(f=3, aggregator=agg, steps=steps, attack="drop",
-                           attack_kw={"loss_rate": 0.10})
-        out = run_byzantine_training(cfg)
-        rows.append((f"comm_loss/{agg}/drop10", f"{out['us_per_step']:.0f}",
-                     f"acc={out['final_accuracy']:.4f}"))
-        print(rows[-1])
-    # Fig 6b-d: fixed f, growing p
-    for p in ((9, 15) if steps <= 20 else (9, 12, 15, 18)):
+    quick = steps <= 20
+    aggs = ("flag", "mean") if quick else ("flag", "multi_krum", "mean")
+    attks = ((("random", {"scale": 5.0}),) if quick else
+             (("random", {"scale": 5.0}), ("sign_flip", {}),
+              ("drop", {"loss_rate": 0.10})))
+    for codec, ckw in CODECS:
+        for agg in aggs:
+            for attack, akw in attks:
+                cfg = ByzRunConfig(f=3, aggregator=agg, steps=steps,
+                                   attack=attack, attack_kw=akw,
+                                   codec=codec, codec_kw=ckw)
+                out = run_byzantine_training(cfg)
+                rows.append((f"comm/{codec}/{agg}/{attack}",
+                             f"{out['us_per_step']:.0f}",
+                             f"acc={out['final_accuracy']:.4f} "
+                             f"saved={out['comm_ratio']:.1f}x"))
+                print(rows[-1])
+    # Figs. 6b-d continuity: marginal utility of extra workers at fixed f.
+    for p in ((9, 15) if quick else (9, 12, 15, 18)):
         for agg in ("flag", "multi_krum"):
             cfg = ByzRunConfig(p=p, f=3, aggregator=agg, steps=steps,
                                attack="random", attack_kw={"scale": 5.0})

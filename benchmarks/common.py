@@ -24,10 +24,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.comm import CommConfig, dense_bits, get_codec, init_ef
 from repro.core import FlagConfig, aggregators
 from repro.core.attacks import apply_attack
 from repro.data.synthetic import SyntheticImages
 from repro.data import augment as augment_lib
+from repro.dist.aggregation import AggregatorConfig, compressed_aggregate
 
 RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
 
@@ -94,6 +96,14 @@ class ByzRunConfig:
     aggregator: str = "flag"
     agg_kw: dict = field(default_factory=dict)
     flag_cfg: FlagConfig | None = None
+    # worker->server compression (repro.comm).  codec != "none" routes the
+    # aggregation through repro.dist.aggregation.compressed_aggregate (the
+    # same bridge the pod train step uses): sketch codecs feed the Gram
+    # path, biased codecs run through error feedback.  codec_kw maps onto
+    # the remaining CommConfig fields (error_feedback, topk_density,
+    # sketch_ratio, seed).
+    codec: str = "none"
+    codec_kw: dict = field(default_factory=dict)
     augment_scheme: str = "none"       # honest-worker augmentation
     augment_workers: int = 0
     gaussian_sigma: float = 0.0
@@ -132,9 +142,11 @@ def run_byzantine_training(cfg: ByzRunConfig, task: SyntheticImages | None = Non
         agg_kw.setdefault("cfg", flag_cfg)
     else:
         agg_kw.setdefault("f", cfg.f)
+    comm_cfg = CommConfig(codec=cfg.codec, **cfg.codec_kw)
+    agg_cfg = AggregatorConfig(name=cfg.aggregator, f=cfg.f, flag=flag_cfg)
 
     @partial(jax.jit, static_argnames=())
-    def step_fn(params, mom, key, lr):
+    def step_fn(params, mom, ef, key, lr):
         ks = jax.random.split(key, cfg.p + 2)
         xs, ys = jax.vmap(lambda k: task.sample(k, cfg.batch))(ks[:cfg.p])
         if cfg.augment_scheme != "none" and cfg.augment_workers > 0:
@@ -148,15 +160,32 @@ def run_byzantine_training(cfg: ByzRunConfig, task: SyntheticImages | None = Non
                          )(xs, ys)
         grads = apply_attack(cfg.attack, grads, ks[-1], cfg.f,
                              **cfg.attack_kw)
-        d = agg_fn(grads, **agg_kw)
+        if cfg.codec != "none":
+            # codecs see the per-leaf gradient tree (leaves (p, ...)) —
+            # the same granularity the pod train step compresses at, so
+            # e.g. signsgd gets per-row scales, not one scale per worker
+            g_tree = jax.vmap(lambda v: _unflatten_like(params, v))(grads)
+            d_tree, aux, ef = compressed_aggregate(
+                g_tree, agg_cfg, comm_cfg,
+                ef if comm_cfg.wants_ef else None)
+            d = _flatten(d_tree)
+        else:
+            d = agg_fn(grads, **agg_kw)
         mom_n = cfg.momentum * mom + d
         params_n = jax.tree.map(lambda a, b: a - lr * b, params,
                                 _unflatten_like(params, mom_n))
-        return params_n, mom_n
+        return params_n, mom_n, ef
 
     @jax.jit
     def accuracy(params):
         return jnp.mean(jnp.argmax(cnn_logits(params, xt), -1) == yt)
+
+    ef = (init_ef(params, cfg.p)
+          if cfg.codec != "none" and comm_cfg.wants_ef else None)
+    like = jax.eval_shape(lambda: init_ef(params, cfg.p))
+    codec = get_codec(comm_cfg)
+    comm_bits = codec.bits(like) if codec else dense_bits(like)
+    comm_ratio = dense_bits(like) / comm_bits
 
     key = jax.random.PRNGKey(cfg.seed + 1)
     traj = []
@@ -164,13 +193,15 @@ def run_byzantine_training(cfg: ByzRunConfig, task: SyntheticImages | None = Non
     for t in range(cfg.steps):
         lr = cfg.lr * (cfg.lr_decay ** (t // cfg.lr_decay_every))
         key, k = jax.random.split(key)
-        params, mom = step_fn(params, mom, k, lr)
+        params, mom, ef = step_fn(params, mom, ef, k, lr)
         if (t + 1) % cfg.eval_every == 0 or t == cfg.steps - 1:
             traj.append((t + 1, float(accuracy(params))))
     wall = time.time() - t0
     return {"final_accuracy": traj[-1][1], "trajectory": traj,
             "wall_seconds": wall,
-            "us_per_step": wall / cfg.steps * 1e6}
+            "us_per_step": wall / cfg.steps * 1e6,
+            "comm_bits_per_step": float(comm_bits),
+            "comm_ratio": float(comm_ratio)}
 
 
 def emit(rows, name):

@@ -12,13 +12,33 @@ def repro_table():
     for path in sorted(glob.glob("results/bench/*.json")):
         with open(path) as f:
             for r in json.load(f):
-                if isinstance(r, list) and len(r) == 3 and "acc=" in str(r[2]):
+                if (isinstance(r, list) and len(r) == 3
+                        and "acc=" in str(r[2])
+                        and not str(r[0]).startswith("comm/")):
                     rows.append(tuple(r))
     if not rows:
         return "*(benchmarks still running — see bench_output.txt)*"
     lines = ["| benchmark | us/step | result |", "|---|---|---|"]
     for name, us, derived in rows:
         lines.append(f"| {name} | {us} | {derived} |")
+    return "\n".join(lines)
+
+
+def comm_table():
+    """Bits-saved vs. accuracy rows from benchmarks/comm_loss.py."""
+    rows = []
+    for path in sorted(glob.glob("results/bench/comm_loss.json")):
+        with open(path) as f:
+            for r in json.load(f):
+                if isinstance(r, list) and str(r[0]).startswith("comm/"):
+                    rows.append(tuple(r))
+    if not rows:
+        return ("*(run `PYTHONPATH=src python -m benchmarks.run "
+                "--only comm_loss` to fill)*")
+    lines = ["| codec / aggregator / attack | us/step | accuracy, "
+             "bits saved |", "|---|---|---|"]
+    for name, us, derived in rows:
+        lines.append(f"| {name[len('comm/'):]} | {us} | {derived} |")
     return "\n".join(lines)
 
 
@@ -82,6 +102,7 @@ def main():
     with open("EXPERIMENTS.md") as f:
         s = f.read()
     s = s.replace("<!-- REPRO_TABLE -->", repro_table())
+    s = s.replace("<!-- COMM_TABLE -->", comm_table())
     s = s.replace("**(table filled from results/bench — see PLACEHOLDER "
                   "markers)**", "")
     s = s.replace("<!-- DRYRUN_TABLE -->", dryrun_summary())

@@ -6,7 +6,15 @@ gradients) — a few minutes on CPU.  ``--arch`` selects any assigned
 architecture (reduced); ``--full-width`` uses d_model=768/12L (~100M) for
 the production-shaped run.
 
+``--codec`` turns on worker->server gradient compression (repro.comm):
+signsgd / topk thread error-feedback memory through the loop, countsketch
+feeds FA's Gram path with compressed payloads.  ``--lockstep`` gives every
+worker the same batch (the concentration regime the robustness analysis
+assumes — the config the compression acceptance tests train under).
+
     PYTHONPATH=src python examples/byzantine_train.py --steps 200
+    PYTHONPATH=src python examples/byzantine_train.py --codec signsgd \\
+        --lockstep --attack sign_flip --steps 200
 """
 
 import argparse
@@ -15,6 +23,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.comm import CODECS, CommConfig, init_ef
 from repro.configs import get_config, reduce_for_smoke
 from repro.core.flag import FlagConfig
 from repro.data.synthetic import SyntheticLM
@@ -36,6 +45,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--full-width", action="store_true")
+    ap.add_argument("--codec", default="none", choices=("none",) + CODECS)
+    ap.add_argument("--no-ef", action="store_true",
+                    help="disable error feedback for biased codecs")
+    ap.add_argument("--lockstep", action="store_true",
+                    help="every worker sees the same batch")
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
 
@@ -51,28 +65,49 @@ def main():
     opt = adamw(weight_decay=0.01)
     params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
     lam = 0.0 if args.workers <= 6 else float(args.workers)
+    comm = CommConfig(codec=args.codec,
+                      error_feedback=False if args.no_ef else None)
     tc = TrainConfig(
         aggregator=AggregatorConfig(
             name=args.aggregator, f=args.byzantine,
             flag=FlagConfig(lam=lam, regularizer="pairwise" if lam else "none")),
-        attack=args.attack, attack_f=args.byzantine)
+        attack=args.attack, attack_f=args.byzantine, comm=comm)
     step_fn = jax.jit(build_train_step(
         cfg, tc, opt, warmup_cosine(3e-3, args.steps, warmup=20)))
+    ef = init_ef(params, args.workers) if comm.wants_ef else None
 
     task = SyntheticLM(vocab_size=cfg.vocab_size)
     wdc = WorkerDataConfig(workers=args.workers,
                            per_worker_batch=args.batch)
     t0 = time.time()
+    m = None
     for t in range(args.steps):
-        batch = lm_worker_batches(task, wdc, t, args.seq)
-        params, opt_state, m = step_fn(params, opt_state, batch,
-                                       jax.random.PRNGKey(t),
-                                       jnp.asarray(t, jnp.int32))
+        if args.lockstep:
+            # same batch for every worker: honest gradients coincide, so
+            # each attack is a pure displacement (concentration regime).
+            one = task.batch(jax.random.fold_in(jax.random.PRNGKey(9), t),
+                             args.batch, args.seq)
+            batch = {k: jnp.broadcast_to(v[None], (args.workers,) + v.shape)
+                     for k, v in one.items()}
+        else:
+            batch = lm_worker_batches(task, wdc, t, args.seq)
+        if comm.wants_ef:
+            params, opt_state, m, ef = step_fn(params, opt_state, batch,
+                                               jax.random.PRNGKey(t),
+                                               jnp.asarray(t, jnp.int32), ef)
+        else:
+            params, opt_state, m = step_fn(params, opt_state, batch,
+                                           jax.random.PRNGKey(t),
+                                           jnp.asarray(t, jnp.int32))
         if t % 20 == 0 or t == args.steps - 1:
-            loss_v = float(m["loss"])
-            gn = float(m["grad_global_norm"])
-            print(f"step {t:4d} loss {loss_v:.4f} |g| {gn:.3f} "
+            print(f"step {t:4d} loss {float(m['loss']):.4f} "
+                  f"|g| {float(m['grad_global_norm']):.3f} "
+                  f"comm {float(m['comm_ratio']):.1f}x "
                   f"({time.time()-t0:.0f}s)")
+    if m is not None:
+        print(f"final loss {float(m['loss']):.4f}  codec={args.codec} "
+              f"comm_bits/step {float(m['comm_bits']):.3e} "
+              f"({float(m['comm_ratio']):.1f}x saved)")
     if args.ckpt:
         path = save_checkpoint(args.ckpt, args.steps,
                                {"params": params, "opt": opt_state})

@@ -1,0 +1,30 @@
+"""Communication-efficient worker->server path: gradient codecs + EF.
+
+The paper's headline claim is *simultaneous* robustness and communication
+efficiency; this package supplies the communication half.  It sits between
+the per-worker gradients and the aggregation layer:
+
+  compressors     — pure encode/decode codec pairs over worker-major
+                    pytrees (identity, signSGD + majority vote, top-k,
+                    CountSketch) with declared bits-per-coordinate cost
+                    models (the ``comm_bits`` metric is exact, not
+                    sampled)
+  error_feedback  — per-worker EF memory so biased codecs (signSGD,
+                    top-k) still converge to the uncompressed fixed point
+
+Dependency direction: ``repro.comm`` depends only on ``jax`` — the
+distribution layer (``repro.dist``) builds on it, never the reverse.  The
+integration points are ``repro.dist.aggregation.compressed_aggregate``
+(codec x aggregator bridge, including the sketch->Gram fast path) and
+``repro.dist.train_step`` (EF state threading + comm telemetry).
+
+See docs/compression.md for each codec's cost model and when EF is
+required.
+"""
+
+from repro.comm.compressors import (CODECS, Codec, CommConfig, dense_bits,
+                                    get_codec, majority_vote)
+from repro.comm.error_feedback import ef_encode_decode, init_ef
+
+__all__ = ["CODECS", "Codec", "CommConfig", "dense_bits", "get_codec",
+           "majority_vote", "ef_encode_decode", "init_ef"]

@@ -1,0 +1,67 @@
+"""Error feedback (EF) memory for biased gradient compression.
+
+Biased codecs (signSGD, top-k) discard a systematic part of every message;
+plain SGD on the decoded messages then converges to a neighborhood whose
+radius scales with the bias.  Error feedback [Seide et al. 2014; Karimireddy
+et al. 2019 "EF-SGD"] fixes this by having every worker *remember* what the
+codec dropped and add it back next round:
+
+    h_t      = g_t + e_t            (gradient + carried memory)
+    payload  = encode(h_t)          (what actually travels)
+    e_{t+1}  = h_t - decode(payload)  (what got dropped, carried forward)
+
+The memories telescope: summed over steps, everything each worker computed
+is eventually transmitted, which restores convergence to the uncompressed
+fixed point (the mean-recovery property ``tests/test_comm.py`` asserts
+generatively).
+
+The EF state is a worker-major pytree with the same treedef as the gradient
+tree and leaves ``(W, *param_shape)`` in fp32 — per *worker* memory, so it
+threads through the train step as an explicit carry (see
+``repro.dist.train_step.build_train_step``; the step's signature grows an
+``ef`` argument only when the active codec needs one).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.compressors import Codec
+
+__all__ = ["init_ef", "ef_encode_decode"]
+
+
+def init_ef(params, workers: int):
+    """Zero EF memory for ``workers`` workers over ``params``' structure.
+
+    Args:
+      params: model parameter pytree (one replica, leaves ``(...)``).
+      workers: W, the worker count (leading axis of the gradient tree).
+    Returns:
+      Pytree with ``params``' treedef and fp32 leaves ``(W, *leaf.shape)``.
+    """
+    return jax.tree.map(
+        lambda p: jnp.zeros((workers,) + p.shape, jnp.float32), params)
+
+
+def ef_encode_decode(codec: Codec, grads, ef):
+    """One EF round: compensate, encode, decode, update the memory.
+
+    Args:
+      codec: the active compressor.
+      grads: worker-major gradient pytree (leaves ``(W, ...)``).
+      ef: EF memory from :func:`init_ef` (same structure), or ``None`` to
+        run the codec without compensation.
+    Returns:
+      ``(decoded, payload, new_ef)`` — the decoded worker-major estimates
+      the aggregator consumes, the raw payload (for gram-feeding codecs /
+      telemetry), and the updated memory (``None`` iff ``ef`` was).
+    """
+    f32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    h = jax.tree.map(jnp.add, f32, ef) if ef is not None else f32
+    payload = codec.encode(h)
+    decoded = codec.decode(payload, h)
+    new_ef = (jax.tree.map(jnp.subtract, h, decoded)
+              if ef is not None else None)
+    return decoded, payload, new_ef

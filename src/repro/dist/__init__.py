@@ -8,9 +8,12 @@ the models):
   sharding     — ``shard`` logical-axis constraints + ``use_sharding`` context
   aggregation  — ``aggregate_tree``: Byzantine-robust pytree aggregation that
                  routes FA (and every Gram-computable baseline) through the
-                 p x p Gram matrix, never materializing the flat (W, n) stack
-  train_step   — vmapped per-worker grads -> attack injection -> aggregation
-                 -> optimizer update, as one pure function
+                 p x p Gram matrix, never materializing the flat (W, n) stack;
+                 ``compressed_aggregate`` wraps it with the ``repro.comm``
+                 worker->server codecs (sketch payloads feed the Gram path)
+  train_step   — vmapped per-worker grads -> attack injection -> compression
+                 -> aggregation -> optimizer update, as one pure function
+                 (EF memory threads through as an explicit carry)
   serve_step   — one-token greedy decode step + the batched decode loop
 """
 

@@ -31,6 +31,11 @@ path is *exactly* the flat reference (asserted at 2e-3 in
 forming the Gram matrix (scaled to keep the diagonal unbiased) — an
 O(stride) cut in Gram FLOPs/bytes used by the production configs; the
 combine always uses the full gradients.
+
+:func:`compressed_aggregate` is the worker->server compressed entry point:
+it routes a ``repro.comm`` codec around ``aggregate_tree`` — sketch codecs
+feed the Gram path directly (weights from compressed payloads, exact
+combine), everything else goes through EF-compensated encode/decode.
 """
 
 from __future__ import annotations
@@ -40,13 +45,16 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.comm.compressors import CommConfig, dense_bits, get_codec
+from repro.comm.error_feedback import ef_encode_decode
 from repro.core import aggregators
 from repro.core.flag import FlagConfig
 from repro.core.gram import fa_weights_from_gram
 from repro.kernels.gram.ops import gram as gram_kernel
 from repro.kernels.weighted_sum.ops import weighted_sum as weighted_sum_kernel
 
-__all__ = ["AggregatorConfig", "tree_gram", "tree_combine", "aggregate_tree"]
+__all__ = ["AggregatorConfig", "tree_gram", "tree_combine", "aggregate_tree",
+           "compressed_aggregate", "GRAM_RULES", "COORDWISE_RULES"]
 
 
 @dataclass(frozen=True)
@@ -88,6 +96,16 @@ def tree_gram(tree, sketch_stride: int = 1, *, gram_dtype: str = "float32",
     ever forming it (Gram additivity).  ``sketch_stride`` > 1 subsamples
     coordinates (diagonal-unbiased approximation, used only for the FA
     weights — the combine stays exact).
+
+    Args:
+      tree: worker-major pytree, every leaf shaped ``(W, ...)``.
+      sketch_stride: keep every stride-th coordinate of each leaf, scaled
+        by ``sqrt(stride)`` so the Gram diagonal stays unbiased.
+      gram_dtype: dtype the leaf matrices are cast to *before* the matmul
+        (accumulation stays fp32).
+      impl: kernel backend — ``'xla'`` | ``'pallas'`` | ``'pallas_interpret'``.
+    Returns:
+      ``(W, W)`` fp32 Gram matrix ``K`` with ``K[i, j] = <g_i, g_j>``.
     """
     leaves = jax.tree.leaves(tree)
     if not leaves:
@@ -106,6 +124,13 @@ def tree_combine(tree, c: jnp.ndarray, *, impl: str = "xla"):
 
     The pytree analogue of ``flat.T @ c`` — the only n-dependent work of
     every linear-combination rule (a weighted all-reduce on a real mesh).
+
+    Args:
+      tree: worker-major pytree, every leaf shaped ``(W, ...)``.
+      c: ``(W,)`` combination weights (cast to each leaf's dtype).
+      impl: kernel backend — ``'xla'`` | ``'pallas'`` | ``'pallas_interpret'``.
+    Returns:
+      Pytree with the worker axis reduced away (leaf shapes ``(...)``).
     """
     def one(leaf):
         if impl != "xla":
@@ -169,32 +194,48 @@ def _gram_weights(K: jnp.ndarray, cfg: AggregatorConfig):
     raise KeyError(cfg.name)
 
 
-_GRAM_RULES = frozenset({"flag", "pca", "mean", "geomed", "krum",
-                         "multi_krum"})
-_COORDWISE_RULES = frozenset({"median", "trimmed_mean", "meamed", "phocas"})
+GRAM_RULES = frozenset({"flag", "pca", "mean", "geomed", "krum",
+                        "multi_krum"})
+COORDWISE_RULES = frozenset({"median", "trimmed_mean", "meamed", "phocas"})
 
 
-def aggregate_tree(tree, cfg: AggregatorConfig):
-    """Aggregate a worker-major gradient pytree; returns ``(d_tree, aux)``.
+def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None):
+    """Aggregate a worker-major gradient pytree.
 
-    ``d_tree`` has the worker axis reduced away (same treedef, leaf shapes
-    ``(...)``); ``aux['weights']`` always holds a ``(W,)`` per-worker
-    combination-weight vector (uniform for coordinate-wise rules, where no
-    single linear combine exists) — the ``fa_weights`` training metric.
+    Args:
+      tree: worker-major gradient pytree, every leaf shaped ``(W, ...)``.
+      cfg: which rule runs and how the Gram matrix is formed.
+      gram: optional precomputed ``(W, W)`` Gram estimate.  When given, the
+        Gram-space rules (and Bulyan's selection) skip ``tree_gram`` and
+        run their weight computation on it instead — this is how sketch
+        codecs (``repro.comm``) feed FA with compressed payloads: weights
+        come from the sketch Gram, the combine still uses the exact local
+        gradients.  Coordinate-wise rules have no Gram stage, so passing
+        ``gram`` for them is an error rather than a silent no-op.
+    Returns:
+      ``(d_tree, aux)`` — ``d_tree`` has the worker axis reduced away (same
+      treedef, leaf shapes ``(...)``); ``aux['weights']`` always holds a
+      ``(W,)`` per-worker combination-weight vector (uniform for
+      coordinate-wise rules, where no single linear combine exists) — the
+      ``fa_weights`` training metric.
     """
     leaves = jax.tree.leaves(tree)
     if not leaves:
         raise ValueError("aggregate_tree: empty gradient pytree")
     W = leaves[0].shape[0]
+    if gram is not None and cfg.name in COORDWISE_RULES:
+        raise ValueError(f"aggregator {cfg.name!r} is coordinate-wise and "
+                         "cannot consume a precomputed Gram matrix")
 
-    if cfg.name in _GRAM_RULES:
-        K = tree_gram(tree, cfg.sketch_stride, gram_dtype=cfg.gram_dtype,
-                      impl=cfg.impl)
+    if cfg.name in GRAM_RULES:
+        K = gram if gram is not None else tree_gram(
+            tree, cfg.sketch_stride, gram_dtype=cfg.gram_dtype,
+            impl=cfg.impl)
         c, aux = _gram_weights(K, cfg)
         d = tree_combine(tree, c, impl=cfg.impl)
         return d, {**aux, "weights": c}
 
-    if cfg.name in _COORDWISE_RULES:
+    if cfg.name in COORDWISE_RULES:
         # Coordinate-wise rules commute with the pytree split: leafwise
         # application == the flat reference on the concatenated matrix.
         fn = aggregators.get_aggregator(cfg.name)
@@ -206,8 +247,9 @@ def aggregate_tree(tree, cfg: AggregatorConfig):
     if cfg.name == "bulyan":
         # Selection is distance-only -> Gram space; the final trimmed mean
         # over the theta selected workers is coordinate-wise -> per leaf.
-        K = tree_gram(tree, cfg.sketch_stride, gram_dtype=cfg.gram_dtype,
-                      impl=cfg.impl)
+        K = gram if gram is not None else tree_gram(
+            tree, cfg.sketch_stride, gram_dtype=cfg.gram_dtype,
+            impl=cfg.impl)
         picks = aggregators.bulyan_select(
             aggregators.sq_dists_from_gram(K), cfg.f)
         theta = picks.shape[0]
@@ -223,4 +265,71 @@ def aggregate_tree(tree, cfg: AggregatorConfig):
         return d, {"weights": c}
 
     raise KeyError(f"unknown aggregator {cfg.name!r}; have "
-                   f"{sorted(_GRAM_RULES | _COORDWISE_RULES | {'bulyan'})}")
+                   f"{sorted(GRAM_RULES | COORDWISE_RULES | {'bulyan'})}")
+
+
+# ---------------------------------------------------------------------------
+# codec x aggregator bridge (the worker->server compressed path)
+# ---------------------------------------------------------------------------
+
+def compressed_aggregate(tree, cfg: AggregatorConfig,
+                         comm: CommConfig = CommConfig(), ef=None):
+    """Aggregate through a worker->server compression codec.
+
+    Routing (see docs/compression.md for the dataflow diagrams):
+
+    * ``comm.codec == 'none'`` — plain :func:`aggregate_tree`; the dense
+      gradient tree is "the payload" (``comm_bits`` = fp32 baseline).
+    * gram-feeding codec (CountSketch) x linear-combination rule — the
+      *payload* forms the Gram estimate (``tree_gram`` over ``(W, k)``
+      sketch leaves) and :func:`aggregate_tree` runs with ``gram=``: worker
+      selection/weighting happens entirely on compressed representations,
+      the combine is a weighted all-reduce of the workers' own exact
+      gradients, and no decoded ``(W, n)`` stack is ever materialized
+      (asserted via hlo_stats in ``tests/test_comm.py``).  Error feedback
+      does not apply — the update direction is exact given the weights —
+      so an *explicit* ``error_feedback=True`` opts out of this path and
+      runs EF-compensated decode instead (EF on an untouched gram path
+      would be a dead buffer pretending to be active).
+    * everything else — EF-compensated encode/decode
+      (:func:`repro.comm.error_feedback.ef_encode_decode`) followed by
+      :func:`aggregate_tree` on the decoded worker-major estimates.
+
+    Args:
+      tree: worker-major gradient pytree, every leaf shaped ``(W, ...)``.
+      cfg: aggregation rule config.
+      comm: codec selection + hyper-parameters.
+      ef: worker-major EF memory (``repro.comm.error_feedback.init_ef``)
+        or ``None``.  Required iff ``comm.wants_ef``.
+    Returns:
+      ``(d_tree, aux, new_ef)``; ``aux`` extends the aggregator aux with
+      ``comm_bits`` (total bits shipped worker->server this step, from the
+      codec's declared cost model) and ``comm_ratio`` (dense fp32 bits /
+      ``comm_bits``).  ``new_ef`` is ``None`` iff ``ef`` was.
+    """
+    codec = get_codec(comm)
+    bits_dense = dense_bits(tree)
+    if codec is None:
+        d, aux = aggregate_tree(tree, cfg)
+        return d, {**aux, "comm_bits": jnp.asarray(bits_dense),
+                   "comm_ratio": jnp.asarray(1.0)}, ef
+    if comm.wants_ef and ef is None:
+        raise ValueError(
+            f"codec {comm.codec!r} needs error feedback: pass "
+            "ef=repro.comm.init_ef(params, workers) and thread the "
+            "returned state (or set CommConfig(error_feedback=False))")
+
+    bits = codec.bits(tree)
+    stats = {"comm_bits": jnp.asarray(bits),
+             "comm_ratio": jnp.asarray(bits_dense / bits)}
+
+    if codec.gram_feed and cfg.name in GRAM_RULES and not comm.wants_ef:
+        payload = codec.encode(tree)
+        K = tree_gram(payload, gram_dtype=cfg.gram_dtype, impl=cfg.impl)
+        d, aux = aggregate_tree(tree, cfg, gram=K)
+        return d, {**aux, **stats}, ef
+
+    use_ef = ef if comm.wants_ef else None
+    decoded, _, new_ef = ef_encode_decode(codec, tree, use_ef)
+    d, aux = aggregate_tree(decoded, cfg)
+    return d, {**aux, **stats}, (new_ef if comm.wants_ef else ef)

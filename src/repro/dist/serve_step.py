@@ -26,7 +26,15 @@ __all__ = ["build_prefill_step", "build_serve_step", "decode_loop"]
 
 
 def build_prefill_step(cfg: ModelConfig, *, attn_impl: str = "xla"):
-    """-> ``prefill(params, batch) -> logits (B, S, V)`` (request scoring)."""
+    """Build the full-sequence scoring step.
+
+    Args:
+      cfg: model config.
+      attn_impl: ``'xla'`` (host / dry-run) or ``'pallas'`` (TPU).
+    Returns:
+      ``prefill(params, batch) -> logits (B, S, V)`` — used for request
+      scoring; ``batch`` is ``{tokens (B, S)[, prefix_embeds]}``.
+    """
 
     def prefill_step(params, batch):
         return transformer.prefill(params, batch, cfg, attn_impl=attn_impl)
@@ -35,8 +43,17 @@ def build_prefill_step(cfg: ModelConfig, *, attn_impl: str = "xla"):
 
 
 def build_serve_step(cfg: ModelConfig, *, max_len: int):
-    """-> ``serve(params, caches, tokens (B,1), step ()) ->
-    (next_tokens (B,1) int32, caches)`` — greedy argmax decode."""
+    """Build the one-token greedy decode step.
+
+    Args:
+      cfg: model config.
+      max_len: static cache length the step compiles against.
+    Returns:
+      ``serve(params, caches, tokens, step) -> (next_tokens, caches)`` —
+      ``tokens`` is ``(B, 1)`` int32, ``step`` a scalar int32 position,
+      ``next_tokens`` the ``(B, 1)`` int32 greedy argmax; cache layout is
+      whatever ``transformer.init_caches`` produced.
+    """
 
     def serve_step(params, caches, tokens, step):
         logits, caches = transformer.decode_step(params, tokens, caches,
@@ -49,11 +66,22 @@ def build_serve_step(cfg: ModelConfig, *, max_len: int):
 
 def decode_loop(params, cfg: ModelConfig, prompts, *, num_steps: int,
                 max_len: int, cache_dtype=jnp.float32):
-    """Greedy generation: consume ``prompts (B, S)``, emit ``(B, num_steps)``.
+    """Greedy generation driver over the compiled serve step.
 
     The prompt is consumed through the same compiled serve step used for
     generation (lockstep batch decoding; prompt logits are discarded except
-    the last, which seeds the first generated token).
+    the last, which seeds the first generated token), so there is one
+    compilation per (arch, batch, max_len).
+
+    Args:
+      params: model parameters.
+      cfg: model config.
+      prompts: ``(B, S)`` int32 prompt tokens.
+      num_steps: number of tokens to generate.
+      max_len: static cache length; requires ``S + num_steps <= max_len``.
+      cache_dtype: KV/recurrent cache dtype.
+    Returns:
+      ``(B, num_steps)`` int32 greedily generated tokens.
     """
     B, S = prompts.shape
     if S + num_steps > max_len:

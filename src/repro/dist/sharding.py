@@ -98,9 +98,16 @@ def current_rules() -> Mapping[str, Any] | None:
 def use_sharding(mesh: Mesh, rules: Mapping[str, Any] | None = None):
     """Activate ``mesh`` + logical rules for every ``shard`` call inside.
 
-    ``rules`` override :data:`DEFAULT_RULES` per logical name.  On meshes
-    with a ``pod`` axis the worker/batch defaults widen to ``(pod, data)``
-    (the multi-pod FA worker axis) before overrides apply.
+    Args:
+      mesh: the ``jax.sharding.Mesh`` to constrain against.
+      rules: optional per-logical-name overrides of :data:`DEFAULT_RULES`.
+        A value may be a mesh-axis name, a tuple of mesh axes (the dim
+        shards over their product), or ``None`` (explicitly replicated).
+    Yields:
+      Nothing — on exit the previous context (usually "no sharding") is
+      restored.  On meshes with a ``pod`` axis the worker/batch defaults
+      widen to ``(pod, data)`` (the multi-pod FA worker axis) before
+      overrides apply.
     """
     resolved = dict(DEFAULT_RULES)
     if "pod" in mesh.shape:
@@ -151,8 +158,17 @@ def logical_spec(shape: Sequence[int], axes: Sequence[str | None],
 def shard(x, axes: Sequence[str | None]):
     """Constrain ``x`` to the active mesh along logical ``axes``.
 
-    Identity when no :func:`use_sharding` context is active (single-host
-    tests / CPU benchmarks), so model code is unconditionally annotated.
+    Args:
+      x: array to annotate; ``len(axes)`` must equal ``x.ndim``.
+      axes: one logical axis name (see the vocabulary above
+        :data:`DEFAULT_RULES`) or ``None`` per dimension, e.g.
+        ``shard(h, ("sub_batch", "seq", "embed"))`` for a ``(B, S, D)``
+        activation.
+    Returns:
+      ``x`` wrapped in a GSPMD sharding constraint under the active
+      :func:`use_sharding` context — or ``x`` unchanged when no context
+      is active (single-host tests / CPU benchmarks), so model code is
+      unconditionally annotated.
     """
     ctx = _CTX.get()
     if ctx is None:

@@ -12,18 +12,31 @@ pipeline jits (and pjits on a mesh) as a single program:
   2. **In-graph attack injection** — ``repro.core.attacks`` corrupts the
      first ``attack_f`` workers' gradients *inside* the graph, so Byzantine
      simulations compile into the same program they benchmark.
-  3. **Aggregation** — :func:`repro.dist.aggregation.aggregate_tree`; FA
-     runs in Gram space (the flat (W, n) matrix is never materialized).
+  3. **Compression + aggregation** —
+     :func:`repro.dist.aggregation.compressed_aggregate`: the optional
+     ``repro.comm`` codec compresses each worker's message (sketch codecs
+     feed FA's Gram path directly; biased codecs run through error
+     feedback), then the rule aggregates.  FA runs in Gram space (the flat
+     (W, n) matrix is never materialized).
   4. **Update** — ``repro.optim`` transform + ``apply_updates``.
+
+When the configured codec needs error feedback (``tc.comm.wants_ef``) the
+step carries the per-worker EF memory explicitly: its signature becomes
+``step(params, opt_state, batch, rng, step_idx, ef)`` returning
+``(params, opt_state, metrics, ef)``, with ``ef`` initialized by
+``repro.comm.init_ef(params, workers)``.  Without EF the signature is the
+classic 5-in / 3-out form, unchanged from the uncompressed path.
 
 Metrics: ``loss`` (mean over workers, pre-attack — honest telemetry),
 ``lr``, ``grad_global_norm`` (of the aggregated update direction),
 ``fa_weights`` (the (W,) raw combination weights c — the paper's worker
-"value" signal), and ``worker_influence`` (|c_i| * ||g_i|| normalized to
+"value" signal), ``worker_influence`` (|c_i| * ||g_i|| normalized to
 sum 1: each worker's share of the aggregated update's mass.  Raw c is the
 right paper-faithful quantity but misleading under degenerate norms — a
 zero-gradient Byzantine worker gets a huge c yet contributes nothing —
-so the Byzantine-dominance tests assert on influence).
+so the Byzantine-dominance tests assert on influence), and
+``comm_bits`` / ``comm_ratio`` (bits shipped worker->server this step per
+the codec's declared cost model, and the fp32-dense ratio).
 """
 
 from __future__ import annotations
@@ -33,8 +46,9 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.comm.compressors import CommConfig
 from repro.core import attacks
-from repro.dist.aggregation import AggregatorConfig, aggregate_tree
+from repro.dist.aggregation import AggregatorConfig, compressed_aggregate
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.optim import Optimizer, apply_updates
@@ -52,10 +66,21 @@ class TrainConfig:
     attack_f: int = 0                 # Byzantine worker count (first f)
     microbatch_splits: int = 1        # grad-accumulation splits per worker
     attn_impl: str = "xla"            # 'xla' (host / dry-run) | 'pallas' (TPU)
+    comm: CommConfig = CommConfig()   # worker->server compression (repro.comm)
 
 
 def init_train_state(key, cfg: ModelConfig, opt: Optimizer):
-    """-> (params, opt_state) for one model replica."""
+    """Initialize one model replica's training state.
+
+    Args:
+      key: PRNG key for parameter init.
+      cfg: the model config.
+      opt: the ``repro.optim`` optimizer whose state is initialized.
+    Returns:
+      ``(params, opt_state)``.  When the train config enables a codec with
+      error feedback, the per-worker EF memory is a *third*, separately
+      initialized piece of state: ``repro.comm.init_ef(params, workers)``.
+    """
     params = transformer.init_params(key, cfg)
     return params, opt.init(params)
 
@@ -69,13 +94,25 @@ def global_norm(tree) -> jnp.ndarray:
 
 def build_train_step(cfg: ModelConfig, tc: TrainConfig, opt: Optimizer,
                      sched, *, grad_shardings=None, param_shardings=None):
-    """Build ``step(params, opt_state, batch, rng, step_idx)``.
+    """Build the jit-able distributed train step.
 
-    ``sched`` maps the int32 step index to a learning rate.  The optional
-    ``grad_shardings`` / ``param_shardings`` pin the worker-major gradient
-    pytree and the updated params to explicit shardings (the dry-run passes
-    GSPMD-propagated layouts; ``None`` lets XLA choose).
-    Returns ``(new_params, new_opt_state, metrics)``.
+    Args:
+      cfg: model config (forward/backward definition).
+      tc: distributed-step config — aggregator, attack, microbatching, and
+        the worker->server compression codec.
+      opt: ``repro.optim`` optimizer.
+      sched: maps the int32 step index to a learning rate.
+      grad_shardings: optional explicit sharding for the worker-major
+        gradient pytree (the dry-run passes GSPMD-propagated layouts;
+        ``None`` lets XLA choose).
+      param_shardings: same, for the updated parameters.
+    Returns:
+      ``step(params, opt_state, batch, rng, step_idx)`` returning
+      ``(new_params, new_opt_state, metrics)`` — unless the codec carries
+      error feedback (``tc.comm.wants_ef``), in which case the EF memory is
+      an explicit extra carry: ``step(params, opt_state, batch, rng,
+      step_idx, ef)`` returning ``(new_params, new_opt_state, metrics,
+      new_ef)``, with ``ef`` from ``repro.comm.init_ef(params, workers)``.
     """
 
     def loss_fn(params, wb):
@@ -110,7 +147,7 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, opt: Optimizer,
         return (jax.tree.map(lambda t: t * inv, g),
                 jax.tree.map(lambda t: t * inv, m))
 
-    def step(params, opt_state, batch, rng, step_idx):
+    def core(params, opt_state, batch, rng, step_idx, ef):
         grads, metrics_w = jax.vmap(worker_grad, in_axes=(None, 0))(
             params, batch)
         if grad_shardings is not None:
@@ -120,7 +157,8 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, opt: Optimizer,
             grads = attacks.apply_attack_tree(tc.attack, grads, rng,
                                               tc.attack_f)
 
-        d, agg_aux = aggregate_tree(grads, tc.aggregator)
+        d, agg_aux, new_ef = compressed_aggregate(grads, tc.aggregator,
+                                                  tc.comm, ef)
 
         lr = sched(step_idx)
         updates, new_opt_state = opt.update(d, opt_state, params, lr)
@@ -142,6 +180,16 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, opt: Optimizer,
         metrics["grad_global_norm"] = global_norm(d)
         metrics["fa_weights"] = c
         metrics["worker_influence"] = influence
+        metrics["comm_bits"] = agg_aux["comm_bits"]
+        metrics["comm_ratio"] = agg_aux["comm_ratio"]
+        return new_params, new_opt_state, metrics, new_ef
+
+    if tc.comm.wants_ef:
+        return core           # ef-carrying signature, 6-in / 4-out
+
+    def step(params, opt_state, batch, rng, step_idx):
+        new_params, new_opt_state, metrics, _ = core(
+            params, opt_state, batch, rng, step_idx, None)
         return new_params, new_opt_state, metrics
 
     return step

@@ -1,0 +1,432 @@
+"""Compression-layer tests (`repro.comm` + the dist aggregation bridge).
+
+Covers: codec round-trip/identity properties, EF-corrected mean recovery
+(generative, via the hypothesis fallback harness), codec x {flag, krum,
+mean} finiteness through the real distributed train step, the >= 8x
+comm_bits reduction the acceptance criteria require, EF-compressed
+training staying within 5% of the uncompressed final loss under the
+lockstep attack config, and — via benchmarks.hlo_stats on the compiled
+step — that the CountSketch codec feeds FA's Gram path without ever
+materializing a decoded (W, n) stack.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.comm import (CODECS, CommConfig, dense_bits, ef_encode_decode,
+                        get_codec, init_ef, majority_vote)
+from repro.core.flag import FlagConfig
+from repro.data.synthetic import SyntheticLM
+from repro.dist.aggregation import (AggregatorConfig, aggregate_tree,
+                                    compressed_aggregate)
+from repro.dist.train_step import (TrainConfig, build_train_step,
+                                   init_train_state)
+from repro.models.config import ModelConfig
+from repro.optim import sgd, constant
+
+W, B, S, F = 6, 2, 16, 2
+
+CFG = ModelConfig(name="tiny-comm", arch_type="dense", num_layers=2,
+                  d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                  vocab_size=64, compute_dtype="float32")
+
+
+def _tree(rng, W=5):
+    return {"a": jnp.asarray(rng.normal(size=(W, 8, 6)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.normal(size=(W, 40)), jnp.float32)}}
+
+
+# ---------------------------------------------------------------------------
+# codec round-trip / identity properties
+# ---------------------------------------------------------------------------
+
+class TestRoundTrip:
+    def test_identity_exact(self, rng):
+        t = _tree(rng)
+        c = get_codec(CommConfig(codec="identity"))
+        out = c.decode(c.encode(t), t)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert c.bits(t) == dense_bits(t)
+
+    def test_signsgd_decode_is_scaled_sign(self, rng):
+        t = _tree(rng)
+        c = get_codec(CommConfig(codec="signsgd"))
+        dec = c.decode(c.encode(t), t)
+        for d, g in zip(jax.tree.leaves(dec), jax.tree.leaves(t)):
+            M = np.asarray(g)
+            # one scale per trailing row: mean |g| over the last axis
+            scale = np.abs(M).mean(axis=-1, keepdims=True)
+            np.testing.assert_allclose(np.asarray(d), np.sign(M) * scale,
+                                       rtol=1e-6)
+
+    def test_signsgd_majority_vote_unanimous(self, rng):
+        # all workers share one sign pattern -> the vote reproduces it
+        base = jnp.asarray(rng.normal(size=(30,)), jnp.float32)
+        t = {"x": jnp.broadcast_to(base[None], (5, 30))}
+        c = get_codec(CommConfig(codec="signsgd"))
+        d = majority_vote(c.encode(t), t)
+        np.testing.assert_array_equal(np.sign(np.asarray(d["x"])),
+                                      np.sign(np.asarray(base)))
+        assert d["x"].shape == (30,)
+
+    def test_signsgd_majority_vote_byzantine_minority(self, rng):
+        # 2 of 5 workers flip their signs; the honest majority wins every
+        # coordinate (the per-coordinate breakdown point of the vote).
+        base = jnp.asarray(rng.normal(size=(30,)) + 3.0, jnp.float32)
+        honest = jnp.broadcast_to(base[None], (3, 30))
+        t = {"x": jnp.concatenate([-honest[:2], honest], axis=0)}
+        c = get_codec(CommConfig(codec="signsgd"))
+        d = majority_vote(c.encode(t), t)
+        np.testing.assert_array_equal(np.sign(np.asarray(d["x"])),
+                                      np.sign(np.asarray(base)))
+
+    def test_topk_keeps_largest(self, rng):
+        t = _tree(rng)
+        c = get_codec(CommConfig(codec="topk", topk_density=0.25))
+        dec = c.decode(c.encode(t), t)
+        for d, g in zip(jax.tree.leaves(dec), jax.tree.leaves(t)):
+            Wd = g.shape[0]
+            M = np.asarray(g.reshape(Wd, -1))
+            D = np.asarray(d.reshape(Wd, -1))
+            n = M.shape[1]
+            k = max(1, round(0.25 * n))
+            for w in range(Wd):
+                nz = np.nonzero(D[w])[0]
+                assert len(nz) == k
+                # kept entries match the source values...
+                np.testing.assert_allclose(D[w, nz], M[w, nz], rtol=1e-6)
+                # ...and are exactly the k largest magnitudes
+                thresh = np.sort(np.abs(M[w]))[-k]
+                assert (np.abs(M[w, nz]) >= thresh - 1e-6).all()
+
+    def test_topk_sparse_fixed_point(self, rng):
+        # a tree that is already k-sparse round-trips exactly
+        c = get_codec(CommConfig(codec="topk", topk_density=0.1))
+        dense = np.zeros((4, 50), np.float32)
+        k = 5
+        for w in range(4):
+            idx = rng.choice(50, size=k, replace=False)
+            dense[w, idx] = rng.normal(size=k) + np.sign(rng.normal(size=k))
+        t = {"x": jnp.asarray(dense)}
+        dec = c.decode(c.encode(t), t)
+        np.testing.assert_allclose(np.asarray(dec["x"]), dense, rtol=1e-6)
+
+    def test_countsketch_gram_unbiased(self):
+        # own generator: statistical tolerances must not depend on how much
+        # of the session-scoped rng stream earlier test modules consumed
+        rng = np.random.default_rng(42)
+        x = rng.normal(size=(1, 256)).astype(np.float32)
+        y = rng.normal(size=(1, 256)).astype(np.float32)
+        dots = []
+        for seed in range(64):
+            c = get_codec(CommConfig(codec="countsketch", sketch_ratio=0.25,
+                                     seed=seed))
+            sx = c.encode({"x": jnp.asarray(x)})[0]
+            sy = c.encode({"x": jnp.asarray(y)})[0]
+            dots.append(float(np.asarray(sx @ sy.T).ravel()[0]))
+        true = float((x @ y.T).ravel()[0])
+        norm = np.linalg.norm(x) * np.linalg.norm(y)
+        assert abs(np.mean(dots) - true) / norm < 0.05
+
+    def test_countsketch_unsketch_unbiased(self):
+        rng = np.random.default_rng(43)
+        x = rng.normal(size=(1, 256)).astype(np.float32)
+        recs = []
+        for seed in range(64):
+            c = get_codec(CommConfig(codec="countsketch", sketch_ratio=0.25,
+                                     seed=seed))
+            payload = c.encode({"x": jnp.asarray(x)})
+            recs.append(np.asarray(c.decode(payload, {"x": jnp.asarray(x)})["x"]))
+        rec = np.mean(recs, axis=0)
+        assert np.linalg.norm(rec - x) / np.linalg.norm(x) < 0.45
+
+    def test_unknown_codec_raises(self):
+        with pytest.raises(KeyError):
+            get_codec(CommConfig(codec="zstd"))
+
+
+# ---------------------------------------------------------------------------
+# cost models
+# ---------------------------------------------------------------------------
+
+class TestBits:
+    def test_ratios(self, rng):
+        # a production-shaped tree: big leaves, so per-leaf overheads wash out
+        t = {"emb": jnp.zeros((8, 64, 128)), "mlp": jnp.zeros((8, 16384))}
+        dense = dense_bits(t)
+        ratio = {name: dense / get_codec(CommConfig(codec=name)).bits(t)
+                 for name in CODECS}
+        assert ratio["identity"] == 1.0
+        assert ratio["signsgd"] > 20.0          # 1 bit + 32/d_last per coord
+        assert ratio["topk"] > 8.0              # 1/16 coords x (32 + idx) bits
+        assert ratio["countsketch"] >= 15.9     # ratio 1/16 fp32 buckets
+        # the acceptance bound: every non-identity codec saves >= 8x
+        assert all(r >= 8.0 for n, r in ratio.items() if n != "identity")
+
+    def test_bits_are_static(self, rng):
+        t = _tree(rng)
+        for name in CODECS:
+            b = get_codec(CommConfig(codec=name)).bits(t)
+            assert isinstance(b, float) and b > 0
+
+
+# ---------------------------------------------------------------------------
+# error feedback: generative mean recovery
+# ---------------------------------------------------------------------------
+
+CASE = st.tuples(st.integers(3, 8),      # workers
+                 st.integers(40, 400),   # coords
+                 st.integers(0, 1))      # codec: 0=signsgd 1=topk
+
+
+class TestErrorFeedback:
+    @settings(max_examples=8, deadline=None)
+    @given(CASE)
+    def test_ef_mean_recovery(self, case):
+        """EF telescopes: the running mean of decoded messages converges to
+        the true (fixed) gradient at rate ||e_T|| / T, for biased codecs."""
+        w, n, which = case
+        codec = get_codec(CommConfig(codec=("signsgd", "topk")[which]))
+        rng = np.random.default_rng(1000 * w + n)
+        g = {"x": jnp.asarray(rng.normal(size=(w, n)), jnp.float32)}
+        ef = jax.tree.map(jnp.zeros_like, g)
+        acc = jnp.zeros_like(g["x"])
+        errs = {}
+        for t in range(1, 65):
+            dec, _, ef = ef_encode_decode(codec, g, ef)
+            acc = acc + dec["x"]
+            if t in (8, 64):
+                errs[t] = float(jnp.linalg.norm(acc / t - g["x"])
+                                / jnp.linalg.norm(g["x"]))
+        assert errs[64] < 0.2, errs
+        assert errs[64] < errs[8], errs      # O(1/T) decay, not a plateau
+
+    def test_ef_none_passthrough(self, rng):
+        t = _tree(rng)
+        codec = get_codec(CommConfig(codec="signsgd"))
+        dec, payload, new_ef = ef_encode_decode(codec, t, None)
+        assert new_ef is None
+        ref = codec.decode(codec.encode(t), t)
+        for a, b in zip(jax.tree.leaves(dec), jax.tree.leaves(ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_missing_ef_raises(self, rng):
+        t = _tree(rng)
+        with pytest.raises(ValueError, match="error feedback"):
+            compressed_aggregate(t, AggregatorConfig(name="mean"),
+                                 CommConfig(codec="signsgd"), None)
+
+    def test_coordwise_rejects_gram(self, rng):
+        t = _tree(rng)
+        with pytest.raises(ValueError, match="coordinate-wise"):
+            aggregate_tree(t, AggregatorConfig(name="median"),
+                           gram=jnp.eye(5))
+
+
+# ---------------------------------------------------------------------------
+# bridge routing
+# ---------------------------------------------------------------------------
+
+class TestBridge:
+    def test_none_matches_plain(self, rng):
+        t = _tree(rng)
+        cfg = AggregatorConfig(name="flag", flag=FlagConfig(lam=2.0))
+        d0, _ = aggregate_tree(t, cfg)
+        d1, aux, ef = compressed_aggregate(t, cfg, CommConfig(), None)
+        assert ef is None and float(aux["comm_ratio"]) == 1.0
+        for a, b in zip(jax.tree.leaves(d0), jax.tree.leaves(d1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_sketch_gram_aggregate_close(self):
+        """CountSketch-fed FA reproduces the exact-Gram aggregate direction
+        and keeps the Byzantine worker suppressed.  (Raw combination
+        weights are ill-conditioned when honest gradients nearly coincide
+        — the subspace can rotate freely inside the honest cluster — so
+        the stable invariants are the *aggregate* and the attacker's
+        share, not the weight vector itself.)"""
+        rng = np.random.default_rng(44)
+        byz = rng.uniform(-8, 8, size=(1, 512))
+        honest = np.ones((5, 512)) + 0.05 * rng.normal(size=(5, 512))
+        t = {"x": jnp.asarray(np.concatenate([byz, honest], axis=0),
+                              jnp.float32)}
+        cfg = AggregatorConfig(name="flag", flag=FlagConfig(lam=0.0,
+                                                            regularizer="none"))
+        d0, _ = aggregate_tree(t, cfg)
+        d1, aux1, _ = compressed_aggregate(
+            t, cfg, CommConfig(codec="countsketch", sketch_ratio=0.5), None)
+        a = np.asarray(d0["x"]).ravel()
+        b = np.asarray(d1["x"]).ravel()
+        cos = a @ b / (np.linalg.norm(a) * np.linalg.norm(b))
+        assert cos > 0.99, cos
+        w1 = np.abs(np.asarray(aux1["weights"]))
+        assert w1[0] / w1.sum() < 0.1    # Byzantine stays suppressed
+
+    def test_sketch_decode_path_for_coordwise(self, rng):
+        t = _tree(rng)
+        d, aux, _ = compressed_aggregate(
+            t, AggregatorConfig(name="median", f=1),
+            CommConfig(codec="countsketch", sketch_ratio=0.5), None)
+        assert all(bool(jnp.all(jnp.isfinite(l)))
+                   for l in jax.tree.leaves(d))
+        assert float(aux["comm_ratio"]) > 1.5
+
+    def test_sketch_explicit_ef_routes_to_decode(self, rng):
+        """error_feedback=True on a gram-feeding codec opts out of the
+        gram fast path: the EF memory must actually update (a dead
+        pass-through buffer would silently pretend EF is active)."""
+        t = _tree(rng)
+        comm = CommConfig(codec="countsketch", sketch_ratio=0.25,
+                          error_feedback=True)
+        assert comm.wants_ef
+        ef0 = jax.tree.map(lambda l: jnp.zeros_like(l, jnp.float32), t)
+        _, _, ef1 = compressed_aggregate(
+            t, AggregatorConfig(name="flag", flag=FlagConfig(lam=2.0)),
+            comm, ef0)
+        moved = sum(float(jnp.max(jnp.abs(a)))
+                    for a in jax.tree.leaves(ef1))
+        assert moved > 0.0
+
+
+# ---------------------------------------------------------------------------
+# codec x aggregator through the real train step
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lockstep_batch():
+    one = SyntheticLM(vocab_size=CFG.vocab_size).batch(
+        jax.random.PRNGKey(7), B, S)
+    return {k: jnp.broadcast_to(v[None], (W,) + v.shape)
+            for k, v in one.items()}
+
+
+@pytest.fixture(scope="module")
+def train_state():
+    return init_train_state(jax.random.PRNGKey(0), CFG, sgd(momentum=0.9))
+
+
+def _comm_step(train_state, batch, agg_name, codec, steps=1):
+    params, opt_state = train_state
+    comm = CommConfig(codec=codec)
+    tc = TrainConfig(
+        aggregator=AggregatorConfig(name=agg_name, f=F,
+                                    flag=FlagConfig(lam=float(W))),
+        attack="sign_flip", attack_f=F, comm=comm)
+    step = jax.jit(build_train_step(CFG, tc, sgd(momentum=0.9),
+                                    constant(1e-3)))
+    ef = init_ef(params, W) if comm.wants_ef else None
+    m = None
+    for t in range(steps):
+        args = (params, opt_state, batch, jax.random.PRNGKey(100 + t),
+                jnp.asarray(t, jnp.int32))
+        if comm.wants_ef:
+            params, opt_state, m, ef = step(*args, ef)
+        else:
+            params, opt_state, m = step(*args)
+    return params, m
+
+
+@pytest.mark.parametrize("agg", ["flag", "krum", "mean"])
+@pytest.mark.parametrize("codec", ["signsgd", "topk", "countsketch"])
+class TestTrainStepCodecs:
+    def test_finite(self, lockstep_batch, train_state, agg, codec):
+        p1, m = _comm_step(train_state, lockstep_batch, agg, codec)
+        assert bool(jnp.isfinite(m["loss"]))
+        assert bool(jnp.isfinite(m["grad_global_norm"]))
+        assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+                   for l in jax.tree.leaves(p1))
+        assert float(m["comm_ratio"]) >= 8.0
+        assert float(m["comm_bits"]) > 0
+
+
+@pytest.mark.slow
+class TestCompressedConvergence:
+    """Acceptance bound: EF-compressed lockstep training within 5% of the
+    uncompressed final loss (mini version of examples/byzantine_train.py's
+    --lockstep --attack sign_flip config; the example itself is the
+    full-scale check).  Marked slow (3 x 25 compiled train steps) so the
+    gating CI lane keeps its ~2 min budget."""
+
+    N_STEPS = 25
+
+    def _loss(self, codec, lockstep_batch, train_state):
+        task = SyntheticLM(vocab_size=CFG.vocab_size)
+        params, opt_state = train_state
+        comm = CommConfig(codec=codec)
+        tc = TrainConfig(
+            aggregator=AggregatorConfig(name="flag", f=F,
+                                        flag=FlagConfig(lam=float(W))),
+            attack="sign_flip", attack_f=F, comm=comm)
+        step = jax.jit(build_train_step(CFG, tc, sgd(momentum=0.9),
+                                        constant(5e-3)))
+        ef = init_ef(params, W) if comm.wants_ef else None
+        for t in range(self.N_STEPS):
+            one = task.batch(jax.random.fold_in(jax.random.PRNGKey(5), t),
+                             B, S)
+            batch = {k: jnp.broadcast_to(v[None], (W,) + v.shape)
+                     for k, v in one.items()}
+            args = (params, opt_state, batch, jax.random.PRNGKey(200 + t),
+                    jnp.asarray(t, jnp.int32))
+            if comm.wants_ef:
+                params, opt_state, m, ef = step(*args, ef)
+            else:
+                params, opt_state, m = step(*args)
+        return float(m["loss"]), float(m["comm_ratio"])
+
+    def test_ef_codecs_track_uncompressed(self, lockstep_batch, train_state):
+        base, _ = self._loss("none", lockstep_batch, train_state)
+        for codec in ("signsgd", "topk"):
+            loss, ratio = self._loss(codec, lockstep_batch, train_state)
+            assert ratio >= 8.0
+            assert loss <= base * 1.05, \
+                f"{codec}: loss {loss:.4f} > 1.05 * uncompressed {base:.4f}"
+
+
+# ---------------------------------------------------------------------------
+# hlo_stats: the sketch feeds the Gram path, no decoded stack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestSketchGramHlo:
+    def test_no_decoded_stack_materialized(self, lockstep_batch, train_state):
+        """The (countsketch, flag) step's dot FLOPs drop vs. the dense step
+        by exactly the Gram term 2 W^2 (n - k): the Gram contraction runs
+        over sketch coordinates, and no decode reconstructs a (W, n) stack
+        (which would *add* work instead of removing it)."""
+        from benchmarks.hlo_stats import parse_cost
+        params, opt_state = train_state
+
+        def lower(codec):
+            tc = TrainConfig(
+                aggregator=AggregatorConfig(name="flag",
+                                            flag=FlagConfig(lam=float(W))),
+                comm=CommConfig(codec=codec))
+            step = jax.jit(build_train_step(CFG, tc, sgd(momentum=0.9),
+                                            constant(1e-3)))
+            lowered = step.lower(params, opt_state, lockstep_batch,
+                                 jax.random.PRNGKey(0),
+                                 jnp.zeros((), jnp.int32))
+            return parse_cost(lowered.compile().as_text())
+
+        dense = lower("none")
+        sketch = lower("countsketch")
+        assert sketch.flops < dense.flops
+
+        ratio = CommConfig().sketch_ratio
+        n_leaves = [int(l.size // W)
+                    for l in jax.tree.leaves(init_ef(params, W))]
+        n_total = sum(n_leaves)
+        k_total = sum(max(1, min(n, round(ratio * n))) for n in n_leaves)
+        expected_delta = 2.0 * W * W * (n_total - k_total)
+        delta = dense.flops - sketch.flops
+        assert abs(delta - expected_delta) / expected_delta < 0.25, \
+            (delta, expected_delta)

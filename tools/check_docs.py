@@ -1,0 +1,88 @@
+"""Docs checks: intra-repo markdown links + doctests in fenced examples.
+
+Two passes, both over the repo's markdown tree (root *.md + docs/):
+
+1. **Link check** — every relative markdown link `[text](path)` must
+   resolve to an existing file (anchors are stripped; http/https/mailto
+   links are skipped).  Broken links are listed and fail the run.
+2. **Doctests** — fenced ```python blocks in docs/*.md and README.md that
+   contain `>>>` prompts run through `doctest` (needs `PYTHONPATH=src`).
+
+Exit status is non-zero on any failure, so CI can gate on it:
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files() -> list[Path]:
+    return sorted(list(REPO.glob("*.md")) + list((REPO / "docs").glob("*.md")))
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in md_files():
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_doctests() -> list[str]:
+    errors = []
+    runner = doctest.DocTestRunner(optionflags=doctest.ELLIPSIS
+                                   | doctest.NORMALIZE_WHITESPACE)
+    parser = doctest.DocTestParser()
+    docs = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    for md in docs:
+        if not md.exists():
+            continue
+        for i, block in enumerate(FENCE_RE.findall(md.read_text())):
+            if ">>>" not in block:
+                continue
+            name = f"{md.relative_to(REPO)}[block {i}]"
+            test = parser.get_doctest(block, {}, name, str(md), 0)
+            out: list[str] = []
+            runner.run(test, out=out.append)
+            if runner.failures:
+                errors.append(f"{name}: doctest failed\n" + "".join(out))
+                runner = doctest.DocTestRunner(
+                    optionflags=doctest.ELLIPSIS
+                    | doctest.NORMALIZE_WHITESPACE)
+    return errors
+
+
+def main() -> int:
+    link_errors = check_links()
+    doc_errors = check_doctests()
+    for e in link_errors + doc_errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    n_md = len(md_files())
+    if link_errors or doc_errors:
+        print(f"{len(link_errors)} broken links, {len(doc_errors)} doctest "
+              f"failures across {n_md} markdown files", file=sys.stderr)
+        return 1
+    print(f"docs OK: {n_md} markdown files, links + doctests clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,276 @@
+"""The BENCH trajectory: solver + Gram + combine wall-clock of the FA hot path.
+
+Times the three stages of a distributed FA aggregation step across
+p in {8, 16, 32, 64} workers x n in {1e5, 1e6} coordinates:
+
+* **solver** — ``fa_weights_from_gram`` with ``solver='qspace'`` (the
+  original q x q eigh, q = p + p(p-1)/2) vs ``solver='rank_p'`` (the p x p
+  closed-Laplacian IRLS).  Solver cost is n-independent (it sees only the
+  (p, p) Gram), so each (p, solver) pair is timed once and reused.
+* **gram** — ``tree_gram`` looped (one kernel dispatch + 128-lane re-pad
+  per leaf) vs fused (whole pytree packed into one chunk stream, a single
+  kernel call).
+* **combine** — ``tree_combine`` (n-dependent weighted reduction).
+
+Results land in ``BENCH_aggregator.json`` at the repo root — the start of
+the perf trajectory.  ``summary`` reports the q-space/rank-p speedup per p
+and the crossover worker count; ``tiny`` holds the CI perf-smoke baseline
+(see ``--tiny`` / ``--check-baseline`` below and the ``perf-smoke`` lane
+in ``.github/workflows/ci.yml``).
+
+Wall-clock numbers are machine-dependent, so the CI gate normalizes by a
+fixed-size numpy matmul calibration stored alongside the baseline: a run
+fails only if the rank-p tiny wall-clock regresses >2x after scaling by
+the calibration ratio (slow runner != regression; slow solver == regression).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.flag import FlagConfig
+from repro.core.gram import fa_weights_from_gram
+from repro.dist.aggregation import tree_combine, tree_gram
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BENCH_JSON = Path(os.environ.get("REPRO_BENCH_AGG_JSON",
+                                 REPO_ROOT / "BENCH_aggregator.json"))
+
+
+def time_call(fn, *args, iters: int = 5):
+    """Mean wall-clock microseconds per call (one warm-up, then timed).
+
+    The warm-up triggers compilation and is fully synchronized via
+    ``jax.block_until_ready`` (works on any pytree result), so the timed
+    loop measures steady-state execution only.
+    """
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def calibration_us(iters: int = 3) -> float:
+    """Machine-speed probe: fixed 512^3 fp32 numpy matmul, us per call.
+
+    Stored with every emitted section so perf gates can compare wall-clock
+    across machines of different speed (see ``check_baseline``).
+    """
+    a = np.random.default_rng(0).normal(size=(512, 512)).astype(np.float32)
+    a @ a  # warm-up
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        a @ a
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def write_bench_json(section: str, payload, path: Path = BENCH_JSON) -> None:
+    """Merge ``payload`` under ``section`` in the shared BENCH json.
+
+    Every benchmark that contributes to the perf trajectory routes its
+    rows through here (``bench_aggregator`` itself, ``wallclock.py``, the
+    CI tiny runs) so the trajectory accumulates in one file.
+    """
+    doc = {}
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            doc = {}
+    doc[section] = payload
+    path.write_text(json.dumps(doc, indent=1, default=float) + "\n")
+    print(f"[bench_aggregator] wrote section {section!r} -> {path}")
+
+
+def _worker_tree(rng, p: int, n: int, leaves: int = 6):
+    """Worker-major pytree with `leaves` leaves totaling ~n coordinates."""
+    sizes = [n // leaves] * (leaves - 1)
+    sizes.append(n - sum(sizes))
+    return {f"leaf{i}": jnp.asarray(rng.normal(size=(p, s)), jnp.float32)
+            for i, s in enumerate(sizes)}
+
+
+def bench_solver(p: int, iters: int, cfg: FlagConfig):
+    """(us_qspace, us_rank_p) for the IRLS solve on a (p, p) Gram."""
+    rng = np.random.default_rng(p)
+    G = jnp.asarray(rng.normal(size=(4 * p, p)), jnp.float32)
+    K = (G.T @ G).block_until_ready()
+    out = {}
+    for solver in ("qspace", "rank_p"):
+        fn = jax.jit(lambda k, s=solver: fa_weights_from_gram(k, cfg,
+                                                              solver=s)[0])
+        out[solver] = time_call(fn, K, iters=iters)
+    return out["qspace"], out["rank_p"]
+
+
+def run(ps=(8, 16, 32, 64), ns=(100_000, 1_000_000), *, iters: int = 3,
+        impl: str = "xla", section: str = "aggregator",
+        path: Path = BENCH_JSON):
+    records = []
+    # n-dependent stages first: the q-space solver at large p allocates
+    # O(p^4) scratch (a 2080^2 eigh workspace at p=64) and measurably
+    # fragments the allocator — timing gram/combine before the solvers
+    # keeps their numbers clean.
+    stage_us = {}
+    for p in ps:
+        for n in ns:
+            rng = np.random.default_rng(p * 1000 + 1)
+            tree = jax.block_until_ready(_worker_tree(rng, p, n))
+            gram_looped = jax.jit(
+                lambda t: tree_gram(t, impl=impl, fused=False))
+            gram_fused = jax.jit(lambda t: tree_gram(t, impl=impl))
+            us_gram = {"looped": time_call(gram_looped, tree, iters=iters),
+                       "fused": time_call(gram_fused, tree, iters=iters)}
+            c = jnp.full((p,), 1.0 / p, jnp.float32)
+            us_combine = time_call(
+                jax.jit(lambda t, w: tree_combine(t, w)), tree, c,
+                iters=iters)
+            stage_us[p, n] = (us_gram, us_combine)
+            print(f"p={p} n={n}: gram looped={us_gram['looped']:.0f}us "
+                  f"fused={us_gram['fused']:.0f}us "
+                  f"combine={us_combine:.0f}us")
+    solver_us = {}
+    for p in ps:
+        cfg = FlagConfig(lam=float(p))
+        solver_us[p] = bench_solver(p, iters, cfg)
+        q = p + p * (p - 1) // 2
+        print(f"solver p={p} (q={q}): qspace={solver_us[p][0]:.0f}us "
+              f"rank_p={solver_us[p][1]:.0f}us "
+              f"speedup={solver_us[p][0] / solver_us[p][1]:.1f}x")
+    for p in ps:
+        for n in ns:
+            us_gram, us_combine = stage_us[p, n]
+            for solver, us_solver in zip(("qspace", "rank_p"), solver_us[p]):
+                for gram_mode, ug in us_gram.items():
+                    records.append({
+                        "p": p, "n": n, "solver": solver, "gram": gram_mode,
+                        "us_solver": round(us_solver, 1),
+                        "us_gram": round(ug, 1),
+                        "us_combine": round(us_combine, 1),
+                        "us_total": round(us_solver + ug + us_combine, 1),
+                    })
+
+    speedups = {p: solver_us[p][0] / solver_us[p][1] for p in ps}
+    crossover = next((p for p in sorted(ps) if speedups[p] > 1.0), None)
+    n_big = max(ns)
+    # structural witness: the fused path is ONE pallas_call per pytree
+    probe = _worker_tree(np.random.default_rng(0), min(ps), 1024, leaves=4)
+    fused_calls = str(jax.make_jaxpr(
+        lambda t: tree_gram(t, impl="pallas_interpret"))(probe)
+    ).count("pallas_call")
+    summary = {
+        "solver_speedup_qspace_over_rank_p": {str(p): round(s, 2)
+                                              for p, s in speedups.items()},
+        "solver_crossover_p": crossover,
+        "crossover_note": (
+            f"rank-p wins from p={crossover} on this host; the gap is "
+            "asymptotic — per IRLS iteration q-space pays O(q^3)=O(p^6) "
+            "(eigh on q=p+p(p-1)/2) vs rank-p's O(p^3), so the speedup "
+            "grows ~p^3"),
+        "fused_pallas_calls_multi_leaf_tree": fused_calls,
+        "gram_note": (
+            "fused = one chunk plan for the whole pytree: a single "
+            "pallas_call on TPU, the piecewise XLA schedule elsewhere; "
+            "looped = one dispatch + 128-lane re-pad per leaf with "
+            "materialized strided copies under sketch_stride"),
+        "gram_fused_speedup_at_largest": {
+            str(p): round(
+                next(r for r in records if r["p"] == p and r["n"] == n_big
+                     and r["gram"] == "looped")["us_gram"]
+                / next(r for r in records if r["p"] == p and r["n"] == n_big
+                       and r["gram"] == "fused")["us_gram"], 2)
+            for p in ps},
+    }
+    payload = {"config": {"ps": list(ps), "ns": list(ns), "iters": iters,
+                          "impl": impl, "backend": jax.default_backend()},
+               "calibration_us": round(calibration_us(), 1),
+               "records": records, "summary": summary}
+    if path is not None:
+        write_bench_json(section, payload, path)
+    return payload
+
+
+def run_tiny(path: Path | None = BENCH_JSON):
+    """CI perf-smoke config: small p/n, interpret-friendly, seconds-scale.
+
+    ``path=None`` measures without touching the shared json (the
+    ``check_baseline`` probe).
+    """
+    return run(ps=(4, 8), ns=(4096,), iters=2, section="tiny", path=path)
+
+
+def check_baseline(baseline_path: Path, *, factor: float = 2.0) -> int:
+    """Gate: fresh tiny rank-p wall-clock vs the committed baseline.
+
+    Scales the committed numbers by the machine-speed calibration ratio,
+    then fails (returns 1) if any fresh rank-p tiny total exceeds
+    ``factor`` x the scaled baseline.
+    """
+    doc = json.loads(Path(baseline_path).read_text())
+    base = doc.get("tiny")
+    if not base:
+        print(f"no 'tiny' baseline in {baseline_path}; nothing to gate "
+              "against", file=sys.stderr)
+        return 1
+    fresh = run_tiny(path=None)
+    scale = fresh["calibration_us"] / max(base["calibration_us"], 1e-9)
+    failures = []
+    for fr in fresh["records"]:
+        if fr["solver"] != "rank_p" or fr["gram"] != "fused":
+            continue
+        br = next((r for r in base["records"]
+                   if (r["p"], r["n"], r["solver"], r["gram"])
+                   == (fr["p"], fr["n"], fr["solver"], fr["gram"])), None)
+        if br is None:
+            continue
+        # gate on the solver stage: the gram/combine stages are sized by n
+        # (tiny here) and dominated by allocator noise at smoke scale,
+        # while us_solver is exactly the code path this PR optimizes.
+        budget = factor * br["us_solver"] * scale
+        status = "OK " if fr["us_solver"] <= budget else "FAIL"
+        print(f"{status} rank_p p={fr['p']} n={fr['n']}: solver "
+              f"{fr['us_solver']:.0f}us vs budget {budget:.0f}us "
+              f"(baseline {br['us_solver']:.0f}us, calib x{scale:.2f}; "
+              f"total {fr['us_total']:.0f}us)")
+        if fr["us_solver"] > budget:
+            failures.append(fr)
+    if failures:
+        print(f"perf-smoke: {len(failures)} rank-p tiny config(s) regressed "
+              f">{factor}x vs committed baseline", file=sys.stderr)
+        return 1
+    print("perf-smoke: rank-p tiny wall-clock within budget")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke config (p in {4,8}, n=4096)")
+    ap.add_argument("--check-baseline", metavar="JSON",
+                    help="compare a fresh tiny run against the committed "
+                         "baseline numbers; exit 1 on >2x regression")
+    ap.add_argument("--out", default=str(BENCH_JSON),
+                    help="BENCH json path (default: repo root)")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.check_baseline:
+        return check_baseline(Path(args.check_baseline))
+    if args.tiny:
+        run_tiny(Path(args.out))
+        return 0
+    run(iters=args.iters, path=Path(args.out))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,6 +47,23 @@ WHILE_RE = re.compile(r"\bwhile\(.*?body=%?([\w.\-]+)")
 TRIP_RE = re.compile(r"known_trip_count\D+(\d+)")
 
 
+def shape_dims(hlo_text: str) -> set[int]:
+    """Every array dimension appearing in any typed shape of the HLO text.
+
+    Used to assert *absence* of blow-up intermediates: e.g. the rank-p FA
+    solver at p=32 must never materialize an array with a q-sized
+    dimension (q = p + p(p-1)/2 = 528) — see tests/test_gram_solvers.py.
+    """
+    dims: set[int] = set()
+    for dt, ds in SHAPE_RE.findall(hlo_text):
+        if dt not in DTYPE_BYTES:
+            continue
+        for d in ds.split(","):
+            if d:
+                dims.add(int(d))
+    return dims
+
+
 def _shape_bytes(shape_text: str, last_only: bool = False) -> int:
     shapes = SHAPE_RE.findall(shape_text)
     if not shapes:

@@ -2,13 +2,16 @@
 
 Times each aggregator on realistic gradient-matrix sizes (p=15, n up to
 1M coordinates) — the paper's complexity discussion (Sec. 4) made FA's
-per-iteration cost the headline limitation; the Gram-space form keeps it
-O(n p^2) with a tiny O(q^3) eigh.
+per-iteration cost the headline limitation; the Gram-space rank-p form
+keeps it O(n p^2) with a tiny O(p^3)-per-iteration solve.
+
+Timing goes through :func:`benchmarks.bench_aggregator.time_call` (single
+synchronized warm-up, then a ``time.perf_counter`` loop) and the rows land
+both in the CSV/``results/bench`` emit and in the shared
+``BENCH_aggregator.json`` trajectory (section ``wallclock``).
 """
 
 from __future__ import annotations
-
-import time
 
 import numpy as np
 import jax
@@ -16,18 +19,13 @@ import jax.numpy as jnp
 
 from repro.core import FlagConfig, aggregators
 from benchmarks.common import emit
-
-
-def time_call(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else         jax.block_until_ready(fn(*args))
-    t0 = time.time()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters * 1e6
+from benchmarks.bench_aggregator import (calibration_us, time_call,
+                                         write_bench_json)
 
 
 def run(p: int = 15, ns=(10_000, 100_000, 1_000_000)):
     rows = [("name", "us_per_call", "derived")]
+    records = []
     rng = np.random.default_rng(0)
     for n in ns:
         G = jnp.asarray(rng.normal(size=(p, n)).astype(np.float32))
@@ -40,8 +38,12 @@ def run(p: int = 15, ns=(10_000, 100_000, 1_000_000)):
             us = time_call(jfn, G)
             rows.append((f"wallclock/{agg}/n={n}", f"{us:.0f}",
                          f"p={p}"))
+            records.append({"aggregator": agg, "p": p, "n": n,
+                            "us_per_call": round(us, 1)})
             print(rows[-1])
     emit(rows, "wallclock")
+    write_bench_json("wallclock", {"calibration_us": round(calibration_us(), 1),
+                                   "records": records})
     return rows
 
 

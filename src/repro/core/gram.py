@@ -5,8 +5,29 @@ parameter server (complexity O(n * N_delta * (sum_i k_i)^2), their Sec. 4
 limitation).  On a pod there is no parameter server and n ~ 1e9, so we
 re-derive the whole procedure in terms of the p x p Gram matrix K = G^T G.
 
-Derivation
-----------
+Two Gram-space solvers coexist (pick via ``solver=``):
+
+``rank_p`` (default)
+    Every matrix FA touches has rank <= p, so the IRLS runs entirely in
+    p-space: the weighted column Gram collapses to the p x p symmetric
+    pencil ``L^T H(u) L`` with ``Kt ~= L L^T`` (Cholesky) and ``H(u) =
+    A diag(u) A^T`` assembled in *closed form* — data columns contribute
+    ``diag(u[:p])`` and each pairwise column (i, j) is a scaled
+    edge-incidence vector, so the pairwise block is a graph Laplacian
+    with edge weights ``u_ij / D~^2_ij``.  Cost per IRLS iteration:
+    O(p^3) time, O(p^2) memory.  No array with a q-sized dimension is
+    ever built (asserted via HLO shape inspection in
+    ``tests/test_gram_solvers.py``).
+
+``qspace`` (opt-in oracle)
+    The original derivation below, kept as a cross-check: materializes
+    the (p, q) mixing matrix ``A`` and the (q, q) column Gram
+    ``S = A^T Kt A`` with q = p + p(p-1)/2 and runs a q x q eigh per
+    IRLS iteration — O(p^6) time, O(p^4) memory (a 528 x 528 eigh for
+    p = 32).
+
+q-space derivation
+------------------
 Let nu = sqrt(diag K) (worker gradient norms), Kt = K / (nu nu^T) the Gram of
 the *normalized* gradients G~.  Every column FA ever decomposes — the data
 columns g~_i and the pairwise-regularizer columns d~_ij — is a fixed linear
@@ -31,13 +52,42 @@ quantity FA needs is Gram-computable:
         c = (1/p) diag(1/nu) W nu,
         W = A diag(sqrt(u)) V_m L_m^{-1} V_m^T diag(sqrt(u)) A^T Kt.
 
+rank-p derivation
+-----------------
+The weighted covariance C(u) = M_w M_w^T = G~ H(u) G~^T has rank <= p with
+
+    H(u) = A diag(u) A^T
+         = diag(u_data) + sum_{i<j} (u_ij / D~^2_ij) (e_i - e_j)(e_i - e_j)^T
+         = diag(u_data) + Laplacian(edge weights w_ij = u_ij / D~^2_ij).
+
+Factor Kt + delta*I = L L^T (Cholesky; delta ~ 10 eps absorbs fp32 rounding
+and rank-deficient Grams).  B = G~ L^{-T} has (near-)orthonormal columns, so
+eigh of the p x p symmetric  M_p = L^T H(u) L = Q Lam Q^T  gives the top-m
+subspace  Y = B Q_m  directly — orthonormal Q_m, no pseudo-inverse scaling.
+With  Z = Q_m^T L^{-1} Kt  (= Y^T G~, an (m, p) array):
+
+  * explained variances:  v_i = ||Z[:, i]||^2,
+        v_ij = ||Z[:, i] - Z[:, j]||^2 / D~^2_ij   (pairwise columns);
+  * chordal distance between successive subspaces:
+        ||Y^T Y'||_F^2 = ||Q_m^T Q'_m||_F^2  (B cancels);
+  * combine weights:
+        d = (1/p) Y Y^T G~ nu' = G~ c~,
+        c~ = (1/p) L^{-T} Q_m Q_m^T L^{-1} Kt nu'   (triangular solves),
+        c  = c~ / nu.
+
+The ``L^{-1} Kt`` form (rather than the algebraically equal ``L^T``) keeps
+rank-deficient Grams exact: components of Q_m in the null space of Kt are
+annihilated by Kt instead of amplified by L^{-T}, matching the q-space
+path's pseudo-inverse treatment.
+
 So the only n-dependent work is forming K (one tall-skinny matmul — a psum
 over model shards in the distributed runtime, a Pallas kernel on TPU) and
-the final weighted combine G c (a weighted all-reduce).  The q^3 eigh is
-replicated on every device: q <= 528 even for p = 32 workers.
+the final weighted combine G c (a weighted all-reduce); the replicated
+per-device solve is O(p^3) per IRLS iteration.
 
-Equivalence with the dense reference (:mod:`repro.core.flag`) is asserted to
-~1e-5 in ``tests/test_gram.py``.
+Equivalence with the dense reference (:mod:`repro.core.flag`) and between
+the two solvers is asserted in ``tests/test_gram_solvers.py``; the full
+derivation with cost accounting lives in ``docs/solver.md``.
 """
 
 from __future__ import annotations
@@ -46,11 +96,14 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
 
 from repro.core import beta_mle
 from repro.core.flag import FlagConfig, default_m, effective_norms
 
 __all__ = ["fa_weights_from_gram", "flag_aggregate_gram", "gram_matrix"]
+
+SOLVERS = ("rank_p", "qspace")
 
 
 def gram_matrix(G: jnp.ndarray) -> jnp.ndarray:
@@ -59,15 +112,26 @@ def gram_matrix(G: jnp.ndarray) -> jnp.ndarray:
     return Gf.T @ Gf
 
 
-def _mixing(K: jnp.ndarray, cfg: FlagConfig, eps: float):
-    """Normalized Gram Kt, mixing matrix A, and per-column coefficients."""
+def _normalized_gram(K: jnp.ndarray, eps: float):
+    """(Kt, nu): unit-diagonal normalized Gram + worker norms."""
     p = K.shape[0]
     nu = jnp.sqrt(jnp.clip(jnp.diag(K), eps))
     Kt = K / (nu[:, None] * nu[None, :])
-    # exact unit diagonal (guards eigh conditioning):
+    # exact unit diagonal (guards eigh/cholesky conditioning):
     Kt = Kt - jnp.diag(jnp.diag(Kt)) + jnp.eye(p, dtype=K.dtype)
+    return Kt, nu
+
+
+def _has_pairs(cfg: FlagConfig, p: int) -> bool:
+    return cfg.regularizer == "pairwise" and cfg.lam > 0.0 and p > 1
+
+
+def _mixing(K: jnp.ndarray, cfg: FlagConfig, eps: float):
+    """Normalized Gram Kt, mixing matrix A, and per-column coefficients."""
+    p = K.shape[0]
+    Kt, nu = _normalized_gram(K, eps)
     eye = jnp.eye(p, dtype=K.dtype)
-    if cfg.regularizer == "pairwise" and cfg.lam > 0.0 and p > 1:
+    if _has_pairs(cfg, p):
         ii, jj = jnp.triu_indices(p, k=1)
         d2 = jnp.clip(2.0 - 2.0 * Kt[ii, jj], 0.0)
         inv_d = jnp.where(d2 > 1e-12, jax.lax.rsqrt(jnp.maximum(d2, 1e-12)), 0.0)
@@ -87,23 +151,17 @@ def _safe_inv(lam: jnp.ndarray, eps: float) -> jnp.ndarray:
     return jnp.where(lam > eps, 1.0 / jnp.maximum(lam, eps), 0.0)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def fa_weights_from_gram(K: jnp.ndarray, cfg: FlagConfig = FlagConfig()):
-    """FA combination weights c from the Gram matrix only.
+# ---------------------------------------------------------------------------
+# q-space solver (the original derivation, retained as the cross-check
+# oracle: O(p^6)/iteration — see module docstring)
+# ---------------------------------------------------------------------------
 
-    Args:
-      K: (p, p) Gram of raw worker gradients, K_ij = g_i . g_j  (fp32).
-    Returns:
-      (c, aux): c (p,) with  d = G @ c  reproducing Algorithm 1's update;
-      aux holds per-worker explained variance, IRLS iterations, objective.
-    """
-    K = K.astype(jnp.float32)
+def _fa_weights_qspace(K: jnp.ndarray, cfg: FlagConfig):
     p = K.shape[0]
     m = cfg.m if cfg.m is not None else default_m(p)
     eps = cfg.eps
     Kt, nu, A, coef = _mixing(K, cfg, eps)
     S = A.T @ Kt @ A                       # (q, q), Gram of unit columns
-    q = S.shape[0]
 
     def eig_top_m(u):
         su = jnp.sqrt(u)
@@ -161,8 +219,150 @@ def fa_weights_from_gram(K: jnp.ndarray, cfg: FlagConfig = FlagConfig()):
     return c, aux
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def flag_aggregate_gram(G: jnp.ndarray, cfg: FlagConfig = FlagConfig()):
+# ---------------------------------------------------------------------------
+# rank-p solver (default: O(p^3)/iteration, O(p^2) memory — see module
+# docstring for the derivation)
+# ---------------------------------------------------------------------------
+
+def _fa_weights_rank_p(K: jnp.ndarray, cfg: FlagConfig):
+    p = K.shape[0]
+    m = cfg.m if cfg.m is not None else default_m(p)
+    if m > p:
+        raise ValueError(
+            f"rank-p solver needs subspace dim m={m} <= p={p} (every FA "
+            "subspace lies in span(G)); use solver='qspace' only as a "
+            "debugging oracle")
+    eps = cfg.eps
+    Kt, nu = _normalized_gram(K, eps)
+    has_pairs = _has_pairs(cfg, p)
+    # Cholesky jitter (see below) — also enters the pair normalization.
+    delta = 10.0 * eps
+
+    # Pairwise-column geometry, (p, p) symmetric, zero diagonal:
+    #   D~^2_ij = ||g~_i - g~_j||^2 = 2 - 2 Kt_ij;  degenerate pairs
+    #   (duplicated workers, D~ -> 0) get inv_d2 = 0 — their q-space column
+    #   is the zero vector, contributing nothing to H(u).  The edge is
+    #   normalized in the *jittered* metric, 1/(D~^2 + 2 delta), because
+    #   ||L^T (e_i - e_j)||^2 = D~^2_ij + 2 delta: with the bare 1/D~^2 a
+    #   near-duplicate pair (D~^2 ~ fp32 rounding ~ delta) would see its
+    #   pencil eigenvalue inflated by (D~^2 + 2 delta)/D~^2 >> 1 and drag
+    #   a spurious difference direction into the top-m subspace.  For
+    #   separated pairs the correction is O(delta) — below fp32 noise.
+    if has_pairs:
+        d2 = jnp.clip(2.0 - 2.0 * Kt, 0.0)
+        inv_d2 = jnp.where(d2 > 1e-12, 1.0 / (d2 + 2.0 * delta), 0.0)
+        inv_d2 = inv_d2 - jnp.diag(jnp.diag(inv_d2))
+        coef_pair = jnp.asarray(cfg.lam / (p - 1), K.dtype)
+        pair_mask = jnp.triu(jnp.ones((p, p), K.dtype), k=1)
+    else:
+        inv_d2 = jnp.zeros((p, p), K.dtype)
+        coef_pair = jnp.asarray(0.0, K.dtype)
+        pair_mask = jnp.zeros((p, p), K.dtype)
+    coef_data = jnp.ones((p,), K.dtype)
+
+    # Symmetrizer: Kt + delta I = L L^T.  The jitter bounds the Cholesky
+    # away from fp32 rounding (Kt is PSD up to ~p*ulp) and gives
+    # rank-deficient Grams a well-defined factor; the combine/variance
+    # formulas below use L^{-1} Kt so null-space directions stay exact.
+    L = jnp.linalg.cholesky(Kt + delta * jnp.eye(p, dtype=K.dtype))
+    LinvK = solve_triangular(L, Kt, lower=True)        # (p, p) = L^{-1} Kt
+
+    def assemble_h(u_data, u_pairs):
+        """H(u) = diag(u_data) + Laplacian(edge weights u_ij / D~^2_ij)."""
+        Ew = u_pairs * inv_d2                          # (p, p), zero diag
+        return jnp.diag(u_data + jnp.sum(Ew, axis=1)) - Ew
+
+    def eig_top_m(u_data, u_pairs):
+        Mp = L.T @ (assemble_h(u_data, u_pairs) @ L)   # (p, p)
+        _, Q = jnp.linalg.eigh(0.5 * (Mp + Mp.T))      # ascending
+        return Q[:, -m:]
+
+    def explained(Qm):
+        """(v_data (p,), v_pairs (p, p)) from Z = Qm^T L^{-1} Kt = Y^T G~."""
+        Z = Qm.T @ LinvK                               # (m, p)
+        v_data = jnp.clip(jnp.sum(Z * Z, axis=0), 0.0, 1.0)
+        # ||Z_i - Z_j||^2 = v_i + v_j - 2 (Z^T Z)_ij, then / D~^2_ij
+        ZtZ = Z.T @ Z
+        pd2 = jnp.clip(v_data[:, None] + v_data[None, :] - 2.0 * ZtZ, 0.0)
+        v_pairs = jnp.clip(pd2 * inv_d2, 0.0, 1.0)
+        return v_data, v_pairs
+
+    def irls(v_data, v_pairs):
+        u_data = beta_mle.irls_weights(v_data, coef_data, alpha=cfg.alpha,
+                                       beta=cfg.beta, a=cfg.a, eps=eps)
+        u_pairs = beta_mle.irls_weights(v_pairs, coef_pair, alpha=cfg.alpha,
+                                        beta=cfg.beta, a=cfg.a, eps=eps)
+        return u_data, u_pairs
+
+    # Init: u = coef (one Flag-Mean step), exactly the q-space init.
+    Q0 = eig_top_m(coef_data, jnp.full((p, p), coef_pair, K.dtype))
+
+    def cond(state):
+        it, done, _ = state
+        return jnp.logical_and(it < cfg.n_iter, jnp.logical_not(done))
+
+    def body(state):
+        it, _, Qm = state
+        u_data, u_pairs = irls(*explained(Qm))
+        Qn = eig_top_m(u_data, u_pairs)
+        # chordal distance^2 between successive subspaces: B cancels, so
+        #   ||Y^T Y'||_F^2 = ||Qm^T Qn||_F^2
+        c2 = 2.0 * (m - jnp.sum((Qm.T @ Qn) ** 2))
+        return (it + 1, c2 < cfg.tol, Qn)
+
+    it, _, Qm = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0), jnp.asarray(False), Q0))
+
+    # Final combine:  c~ = (1/p) L^{-T} Qm Qm^T L^{-1} Kt nu',  c = c~/nu.
+    nu_eff = effective_norms(nu, cfg.norm_mode)
+    s = solve_triangular(L, Kt @ nu_eff, lower=True)
+    ct = solve_triangular(L, Qm @ (Qm.T @ s), lower=True, trans=1)
+    c = ct / (nu * p)
+    if cfg.renormalize:  # FA-N (see FlagConfig)
+        c = c / jnp.maximum(jnp.abs(jnp.sum(c)), 1e-6)
+
+    v_data, v_pairs = explained(Qm)
+    nll = partial(beta_mle.beta_nll_terms, alpha=cfg.alpha, beta=cfg.beta,
+                  a=cfg.a, eps=eps)
+    objective = jnp.sum(coef_data * nll(v_data))
+    if has_pairs:
+        objective = objective + coef_pair * jnp.sum(pair_mask * nll(v_pairs))
+    aux = {
+        "explained_variance": v_data,
+        "objective": objective,
+        "iterations": it,
+        "weights": c,
+        "m": m,
+    }
+    return c, aux
+
+
+@partial(jax.jit, static_argnames=("cfg", "solver"))
+def fa_weights_from_gram(K: jnp.ndarray, cfg: FlagConfig = FlagConfig(), *,
+                         solver: str = "rank_p"):
+    """FA combination weights c from the Gram matrix only.
+
+    Args:
+      K: (p, p) Gram of raw worker gradients, K_ij = g_i . g_j  (fp32).
+      cfg: FA hyper-parameters (static).
+      solver: ``'rank_p'`` (default — p x p eigh per IRLS iteration, no
+        q-sized intermediate) or ``'qspace'`` (the original q x q
+        derivation, q = p + p(p-1)/2, retained as a cross-check oracle).
+    Returns:
+      (c, aux): c (p,) with  d = G @ c  reproducing Algorithm 1's update;
+      aux holds per-worker explained variance, IRLS iterations, objective.
+    """
+    K = K.astype(jnp.float32)
+    if solver == "rank_p":
+        return _fa_weights_rank_p(K, cfg)
+    if solver == "qspace":
+        return _fa_weights_qspace(K, cfg)
+    raise ValueError(f"unknown solver {solver!r}; have {SOLVERS}")
+
+
+@partial(jax.jit, static_argnames=("cfg", "solver"))
+def flag_aggregate_gram(G: jnp.ndarray, cfg: FlagConfig = FlagConfig(), *,
+                        solver: str = "rank_p"):
     """Single-host convenience: d = G @ fa_weights_from_gram(G^T G)."""
-    c, aux = fa_weights_from_gram(gram_matrix(G), cfg)
+    c, aux = fa_weights_from_gram(gram_matrix(G), cfg, solver=solver)
     return G @ c.astype(G.dtype), aux

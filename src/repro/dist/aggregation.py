@@ -9,9 +9,12 @@ is exactly the parameter-server bottleneck the Gram-space derivation in
 flat stack.  Instead it exploits two structural facts:
 
 * **Gram additivity** — ``K = G G^T = sum_leaf  G_leaf G_leaf^T``: the
-  (W, W) Gram matrix accumulates leaf by leaf (``tree_gram``), each term a
-  tall-skinny matmul dispatched through ``repro.kernels.gram`` (Pallas on
-  TPU, XLA elsewhere; a per-shard psum on a real mesh).
+  (W, W) Gram matrix is one tall-skinny contraction over the packed leaf
+  stream (``tree_gram``): the fused one-pass kernel in
+  ``repro.kernels.gram`` issues a *single* ``pallas_call`` for the whole
+  pytree (Pallas on TPU, XLA elsewhere; a per-shard psum on a real mesh),
+  with the legacy per-leaf loop kept behind ``fused=False`` for the
+  benchmarks.
 * **Combine linearity** — any rule whose output is a fixed linear
   combination ``d = G^T c`` of worker gradients applies leafwise
   (``tree_combine``), a weighted reduction over the worker axis.
@@ -27,10 +30,11 @@ coordinate-wise trimmed mean per leaf over the selected workers.  Every
 path is *exactly* the flat reference (asserted at 2e-3 in
 ``tests/test_dist.py`` and generatively in ``tests/test_properties.py``).
 
-``sketch_stride`` subsamples every stride-th coordinate of each leaf when
-forming the Gram matrix (scaled to keep the diagonal unbiased) — an
-O(stride) cut in Gram FLOPs/bytes used by the production configs; the
-combine always uses the full gradients.
+``sketch_stride`` subsamples the gradient stream when forming the Gram
+matrix (every stride-th chunk on the fused path, folded into the kernel
+index map; rescaled so the diagonal stays unbiased) — an O(stride) cut in
+Gram FLOPs/bytes used by the production configs; the combine always uses
+the full gradients.
 
 :func:`compressed_aggregate` is the worker->server compressed entry point:
 it routes a ``repro.comm`` codec around ``aggregate_tree`` — sketch codecs
@@ -51,6 +55,7 @@ from repro.core import aggregators
 from repro.core.flag import FlagConfig
 from repro.core.gram import fa_weights_from_gram
 from repro.kernels.gram.ops import gram as gram_kernel
+from repro.kernels.gram.ops import tree_gram_fused
 from repro.kernels.weighted_sum.ops import weighted_sum as weighted_sum_kernel
 
 __all__ = ["AggregatorConfig", "tree_gram", "tree_combine", "aggregate_tree",
@@ -89,27 +94,39 @@ def _leaf_matrix(leaf: jnp.ndarray, stride: int, dtype: str) -> jnp.ndarray:
 
 
 def tree_gram(tree, sketch_stride: int = 1, *, gram_dtype: str = "float32",
-              impl: str = "xla") -> jnp.ndarray:
-    """(W, W) Gram matrix of the flattened worker gradients, leaf by leaf.
+              impl: str = "xla", fused: bool = True) -> jnp.ndarray:
+    """(W, W) Gram matrix of the flattened worker gradients, one pass.
 
-    Equals ``flat @ flat.T`` for the concatenated ``(W, n)`` matrix without
-    ever forming it (Gram additivity).  ``sketch_stride`` > 1 subsamples
-    coordinates (diagonal-unbiased approximation, used only for the FA
-    weights — the combine stays exact).
+    Equals ``flat @ flat.T`` for the concatenated ``(W, n)`` matrix.
+    The default *fused* path packs every leaf into a single worker-major
+    chunk stream and issues exactly one kernel call for the whole pytree
+    (one ``pallas_call`` on the Pallas backends; see
+    ``repro.kernels.gram.ops.tree_gram_fused``), with ``sketch_stride``
+    folded into the kernel index map — every stride-th block_n-wide chunk
+    is read, the rest of HBM is skipped, and the result is rescaled by the
+    exact inverse sampling fraction (diagonal-unbiased; weights only — the
+    combine stays exact).  ``fused=False`` keeps the per-leaf loop (one
+    dispatch + re-pad per leaf, element-stride sketching) as the
+    reference/comparison path the benchmarks time against.
 
     Args:
       tree: worker-major pytree, every leaf shaped ``(W, ...)``.
-      sketch_stride: keep every stride-th coordinate of each leaf, scaled
-        by ``sqrt(stride)`` so the Gram diagonal stays unbiased.
-      gram_dtype: dtype the leaf matrices are cast to *before* the matmul
+      sketch_stride: fused path — keep every stride-th chunk of the packed
+        stack; looped path — keep every stride-th coordinate of each leaf,
+        scaled by ``sqrt(stride)``.  Both keep the diagonal unbiased.
+      gram_dtype: dtype the gradient stack is cast to *before* the matmul
         (accumulation stays fp32).
       impl: kernel backend — ``'xla'`` | ``'pallas'`` | ``'pallas_interpret'``.
+      fused: one-pass fused kernel (default) vs per-leaf loop.
     Returns:
       ``(W, W)`` fp32 Gram matrix ``K`` with ``K[i, j] = <g_i, g_j>``.
     """
     leaves = jax.tree.leaves(tree)
     if not leaves:
         raise ValueError("tree_gram: empty gradient pytree")
+    if fused:
+        return tree_gram_fused(leaves, sketch_stride=sketch_stride,
+                               gram_dtype=gram_dtype, impl=impl)
     W = leaves[0].shape[0]
     K = jnp.zeros((W, W), jnp.float32)
     for leaf in leaves:
@@ -134,11 +151,21 @@ def tree_combine(tree, c: jnp.ndarray, *, impl: str = "xla"):
     """
     def one(leaf):
         if impl != "xla":
+            # the kernel upcasts both operands to fp32 in VMEM, so c keeps
+            # full precision end to end; only the output is leaf-dtype.
             d = weighted_sum_kernel(
                 leaf.reshape(leaf.shape[0], -1).T,
-                c.astype(leaf.dtype), impl=impl)
+                c.astype(jnp.float32), impl=impl)
             return d.reshape(leaf.shape[1:])
-        return jnp.tensordot(c.astype(leaf.dtype), leaf, axes=(0, 0))
+        # contract in fp32 (c stays fp32, bf16 leaves accumulate in fp32
+        # via preferred_element_type) and cast only the result — casting c
+        # to bf16 first would truncate the combine weights before the
+        # reduction.
+        d = jax.lax.dot_general(
+            c.astype(jnp.float32), leaf,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return d.astype(leaf.dtype)
     return jax.tree.map(one, tree)
 
 

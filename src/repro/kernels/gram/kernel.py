@@ -1,13 +1,22 @@
-"""Blocked tall-skinny Gram kernel:  K = G^T G,  G in R^{n x p},  p << n.
+"""Blocked tall-skinny Gram kernels:  K = G^T G,  G in R^{n x p},  p << n.
 
-TPU mapping.  G streams HBM -> VMEM in (block_n, p_pad) tiles; the (p_pad,
-p_pad) fp32 accumulator lives in the *output* VMEM block, which every grid
-step revisits (index_map is constant) — the canonical Pallas reduction
-pattern.  p is padded to the 128-lane width so the MXU sees an aligned
-(block_n x 128) @ (128 x block_n)^T contraction; zero padding contributes
-zeros to K, removed by the wrapper.
+Two kernels live here:
 
-The contraction is issued as  dot(G_blk^T, G_blk)  with
+* :func:`gram_pallas` — the original per-matrix kernel (one ``pallas_call``
+  per (n, p) matrix; the *looped* tree path dispatches it once per leaf).
+* :func:`tree_gram_pallas` — the fused one-pass tree kernel: the whole
+  worker-major gradient row-stack (every leaf concatenated, (W, N)) streams
+  through a single ``pallas_call`` as fixed-size (W_pad, block_n) chunks
+  into one fp32 accumulator.  ``sketch_stride`` is folded into the index
+  map (grid step j reads the chunk at block index j*stride) so the sketch
+  never materializes a strided+scaled copy; the wrapper rescales once by
+  the exact sampling fraction from :func:`ref.chunk_schedule`.
+
+TPU mapping (both).  Tiles stream HBM -> VMEM; the fp32 accumulator lives
+in the *output* VMEM block, which every grid step revisits (index_map is
+constant) — the canonical Pallas reduction pattern.  The worker axis is
+padded to the 128-lane width once per call; zero padding contributes zeros
+to K, removed by the wrapper.  Contractions are issued with
 preferred_element_type=float32 so bf16 gradients accumulate in fp32 (bf16
 Gram accumulation is one of the §Perf experiments — see ops.gram(precision=...)).
 """
@@ -19,6 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.gram.ref import chunk_schedule
 
 
 def _gram_kernel(g_ref, k_ref):
@@ -58,3 +69,49 @@ def gram_pallas(G: jnp.ndarray, *, block_n: int = 1024,
         interpret=interpret,
     )(Gp)
     return K[:p, :p]
+
+
+def _tree_gram_kernel(x_ref, k_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        k_ref[...] = jnp.zeros_like(k_ref)
+
+    x = x_ref[...]                                   # (w_pad, block_n)
+    k_ref[...] += jax.lax.dot_general(
+        x, x,
+        dimension_numbers=(((1,), (1,)), ((), ())),  # contract over n-chunk
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("sketch_stride", "block_n",
+                                             "interpret"))
+def tree_gram_pallas(X: jnp.ndarray, *, sketch_stride: int = 1,
+                     block_n: int = 1024,
+                     interpret: bool = True) -> jnp.ndarray:
+    """One-pass fused Gram:  K = scale * X_S X_S^T in a single pallas_call.
+
+    X: (W, N) worker-major row-stack of every flattened gradient leaf
+    (bf16 or fp32).  X_S is the chunk subset of :func:`ref.chunk_schedule`
+    — with ``sketch_stride`` > 1 the grid visits every stride-th
+    (W_pad, block_n) chunk via the index map, skipping the rest of HBM
+    entirely.  Returns (W, W) fp32.
+    """
+    w, n = X.shape
+    w_pad = max(128, -(-w // 128) * 128)
+    kept, n_pad, scale = chunk_schedule(n, block_n, sketch_stride)
+    Xp = jnp.zeros((w_pad, n_pad), X.dtype).at[:w, :n].set(X)
+
+    stride = max(1, sketch_stride)
+    K = pl.pallas_call(
+        _tree_gram_kernel,
+        grid=(kept,),
+        in_specs=[pl.BlockSpec((w_pad, block_n), lambda j: (0, j * stride))],
+        out_specs=pl.BlockSpec((w_pad, w_pad), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((w_pad, w_pad), jnp.float32),
+        interpret=interpret,
+    )(Xp)
+    K = K[:w, :w]
+    return K * scale if scale != 1.0 else K

@@ -1,7 +1,13 @@
-"""Pure-jnp oracle for the Gram kernel."""
+"""Pure-jnp oracles for the Gram kernels.
+
+``chunk_schedule`` is the shared (pure-Python) chunk-sampling plan used by
+both the fused Pallas kernel and the XLA reference, so the two paths see
+byte-identical coordinate subsets.
+"""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -9,3 +15,118 @@ def gram_ref(G: jnp.ndarray) -> jnp.ndarray:
     """K = G^T G accumulated in fp32.  G: (n, p) -> K: (p, p) fp32."""
     Gf = G.astype(jnp.float32)
     return Gf.T @ Gf
+
+
+def chunk_schedule(n: int, block_n: int, stride: int):
+    """Static chunk-sampling plan for the one-pass tree Gram.
+
+    The fused kernel streams the concatenated (W, n) gradient row-stack as
+    ``block_n``-wide chunks.  ``stride`` > 1 keeps every stride-th *chunk*
+    (the stride is folded into the Pallas index map — no strided copy is
+    ever materialized), and the result is rescaled by the exact inverse
+    sampling fraction so the Gram diagonal stays unbiased.  Inputs smaller
+    than one chunk are returned exact (scale 1).
+
+    Returns:
+      (kept, n_pad, scale): number of grid steps, padded coordinate count
+      (zero padding, contributes nothing), and the fp32 rescale factor
+      ``n / coords_covered``.
+    """
+    if n <= 0:
+        raise ValueError(f"chunk_schedule: need n > 0, got {n}")
+    stride = max(1, stride)
+    total = -(-n // block_n)                     # ceil: chunks covering n
+    kept = total if stride == 1 else max(1, -(-total // stride))
+    covered = 0
+    for j in range(kept):
+        off = j * stride * block_n
+        covered += max(0, min(block_n, n - off))
+    n_pad = max(-(-n // block_n) * block_n,
+                (kept - 1) * stride * block_n + block_n)
+    return kept, n_pad, float(n) / float(covered)
+
+
+def piece_plan(sizes, block_n: int, stride: int):
+    """Static (leaf, start, length) pieces covering the kept chunks.
+
+    Maps the kept chunks of the conceptual packed (W, n) stream back onto
+    per-leaf coordinate ranges, merging contiguous ranges of the same leaf
+    (at stride 1 every chunk is kept, so the plan collapses to one piece
+    per leaf).  This lets the XLA backend consume the *identical* sampled
+    coordinate set as the packed Pallas kernel without ever materializing
+    the packed copy — on CPU the pack is pure memory-bandwidth tax.
+
+    Returns:
+      (pieces, scale): pieces is a list of (leaf_index, start, length)
+      over flattened per-leaf coordinates; scale as in
+      :func:`chunk_schedule`.
+    """
+    n = sum(sizes)
+    kept, _, scale = chunk_schedule(n, block_n, stride)
+    stride = max(1, stride)
+    starts = [0]
+    for s in sizes:
+        starts.append(starts[-1] + s)
+    pieces: list[tuple[int, int, int]] = []
+    for j in range(kept):
+        off = j * stride * block_n
+        end = min(off + block_n, n)
+        for li in range(len(sizes)):
+            a, b = max(off, starts[li]), min(end, starts[li + 1])
+            if a >= b:
+                continue
+            if (pieces and pieces[-1][0] == li
+                    and starts[li] + pieces[-1][1] + pieces[-1][2] == a):
+                pieces[-1] = (li, pieces[-1][1], pieces[-1][2] + b - a)
+            else:
+                pieces.append((li, a - starts[li], b - a))
+    return pieces, scale
+
+
+def tree_gram_pieces_ref(leaves, *, sketch_stride: int = 1,
+                         block_n: int = 1024) -> jnp.ndarray:
+    """XLA fused tree Gram: Gram additivity over the static piece plan.
+
+    Numerically the same coordinate subset as the packed kernel (identical
+    ``chunk_schedule``), accumulated piece by piece in fp32 — no packed
+    (W, n) copy.  Leaves may be bf16; ``preferred_element_type`` keeps
+    accumulation fp32.
+    """
+    ms = [leaf.reshape(leaf.shape[0], -1) for leaf in leaves]
+    pieces, scale = piece_plan([m.shape[1] for m in ms], block_n,
+                               sketch_stride)
+    w = ms[0].shape[0]
+    K = jnp.zeros((w, w), jnp.float32)
+    for li, start, length in pieces:
+        # (n_piece, W) with the contraction over dim 0 — the layout the
+        # CPU/TPU dot handles best for tall-skinny Grams.
+        piece = jax.lax.dynamic_slice_in_dim(ms[li], start, length,
+                                             axis=1).T
+        K = K + jax.lax.dot_general(
+            piece, piece, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return K * scale if scale != 1.0 else K
+
+
+def tree_gram_chunk_ref(X: jnp.ndarray, *, sketch_stride: int = 1,
+                        block_n: int = 1024) -> jnp.ndarray:
+    """XLA reference for the fused tree Gram:  K = scale * X_S X_S^T.
+
+    X is the worker-major (W, n) row-stack of every flattened leaf; X_S is
+    the chunk subset from :func:`chunk_schedule`.  Inputs stay in their
+    own dtype (bf16 allowed); accumulation is fp32 via
+    ``preferred_element_type``.
+    """
+    w, n = X.shape
+    kept, n_pad, scale = chunk_schedule(n, block_n, sketch_stride)
+    if sketch_stride <= 1:
+        Xs = X
+    else:
+        Xp = jnp.zeros((w, n_pad), X.dtype).at[:, :n].set(X)
+        Xs = jnp.concatenate(
+            [jax.lax.dynamic_slice_in_dim(Xp, j * sketch_stride * block_n,
+                                          block_n, axis=1)
+             for j in range(kept)], axis=1)
+    K = jax.lax.dot_general(Xs, Xs, dimension_numbers=(((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return K * scale if scale != 1.0 else K

@@ -14,8 +14,8 @@ import pytest
 
 pytestmark = pytest.mark.slow
 
-from repro.kernels.gram.kernel import gram_pallas
-from repro.kernels.gram.ref import gram_ref
+from repro.kernels.gram.kernel import gram_pallas, tree_gram_pallas
+from repro.kernels.gram.ref import gram_ref, tree_gram_chunk_ref
 from repro.kernels.weighted_sum.kernel import weighted_sum_pallas
 from repro.kernels.weighted_sum.ref import weighted_sum_ref
 from repro.kernels.coord_stats.kernel import coord_stats_pallas
@@ -52,6 +52,53 @@ class TestGramKernel:
     def test_symmetry_and_psd(self, rng):
         G = _rand(rng, (512, 10), jnp.float32)
         K = np.asarray(gram_pallas(G, interpret=True))
+        np.testing.assert_allclose(K, K.T, rtol=1e-5)
+        assert np.linalg.eigvalsh(K).min() > -1e-3
+
+
+class TestFusedTreeGramKernel:
+    """The one-pass chunk-streamed tree Gram vs its jnp chunk oracle.
+
+    Uses module-local generators (not the shared session ``rng``) so the
+    pre-existing kernel sweeps keep their exact random streams."""
+
+    @pytest.mark.parametrize("w,n", [(3, 700), (7, 2048), (16, 5000),
+                                     (32, 1111)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_chunk_ref(self, w, n, dtype):
+        rng = np.random.default_rng(w * 10_000 + n)
+        X = _rand(rng, (w, n), dtype)
+        got = tree_gram_pallas(X, block_n=256, interpret=True)
+        want = tree_gram_chunk_ref(X, block_n=256)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want),
+            rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+            atol=2e-1 if dtype == jnp.bfloat16 else 1e-2)
+
+    @pytest.mark.parametrize("stride", [2, 4])
+    def test_sketch_stride_matches_chunk_ref(self, stride):
+        """Index-map chunk sampling == the jnp chunk subset, bit-for-bit
+        plan: both sides consume the same chunk_schedule."""
+        rng = np.random.default_rng(71 + stride)
+        X = _rand(rng, (5, 9000), jnp.float32)
+        got = tree_gram_pallas(X, sketch_stride=stride, block_n=512,
+                               interpret=True)
+        want = tree_gram_chunk_ref(X, sketch_stride=stride, block_n=512)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-3)
+
+    def test_block_size_invariance_unsketched(self):
+        rng = np.random.default_rng(73)
+        X = _rand(rng, (6, 3000), jnp.float32)
+        a = tree_gram_pallas(X, block_n=128, interpret=True)
+        b = tree_gram_pallas(X, block_n=1024, interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-3)
+
+    def test_symmetry_and_psd(self):
+        rng = np.random.default_rng(79)
+        X = _rand(rng, (10, 1500), jnp.float32)
+        K = np.asarray(tree_gram_pallas(X, interpret=True))
         np.testing.assert_allclose(K, K.T, rtol=1e-5)
         assert np.linalg.eigvalsh(K).min() > -1e-3
 

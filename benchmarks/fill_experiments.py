@@ -42,6 +42,24 @@ def comm_table():
     return "\n".join(lines)
 
 
+def churn_table():
+    """Membership-churn rows from benchmarks/membership_churn.py."""
+    rows = []
+    for path in sorted(glob.glob("results/bench/membership_churn.json")):
+        with open(path) as f:
+            for r in json.load(f):
+                if isinstance(r, list) and str(r[0]).startswith("churn/"):
+                    rows.append(tuple(r))
+    if not rows:
+        return ("*(run `PYTHONPATH=src python -m "
+                "benchmarks.membership_churn` to fill)*")
+    lines = ["| fault scenario / aggregator | us/step | final loss, "
+             "active workers, compiles |", "|---|---|---|"]
+    for name, us, derived in rows:
+        lines.append(f"| {name[len('churn/'):]} | {us} | {derived} |")
+    return "\n".join(lines)
+
+
 def dryrun_summary():
     singles, multis, fails = [], [], []
     for path in sorted(glob.glob("results/dryrun/*.json")):
@@ -103,6 +121,7 @@ def main():
         s = f.read()
     s = s.replace("<!-- REPRO_TABLE -->", repro_table())
     s = s.replace("<!-- COMM_TABLE -->", comm_table())
+    s = s.replace("<!-- CHURN_TABLE -->", churn_table())
     s = s.replace("**(table filled from results/bench — see PLACEHOLDER "
                   "markers)**", "")
     s = s.replace("<!-- DRYRUN_TABLE -->", dryrun_summary())

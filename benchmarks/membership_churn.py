@@ -1,0 +1,101 @@
+"""Membership churn under training: fault scenario x aggregator sweep.
+
+Workers leaving and joining mid-run is the system-level failure mode the
+elastic layer (repro.dist.membership) adds on top of the Byzantine threat
+models.  Every cell trains the reduced LM through the *real* distributed
+train step with a ``TrainConfig.faults`` schedule — crash / leave+rejoin /
+rolling churn / periodic stragglers — and reports the final loss next to
+the mean active-worker count and the *compile count* (membership is a
+traced function of the step index, so every cell must compile exactly
+once; the sweep asserts it).
+
+Rows are named ``churn/<scenario>/<aggregator>`` and are picked up by
+``benchmarks/fill_experiments.py`` into the ``<!-- CHURN_TABLE -->``
+placeholder of EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.membership_churn        # full
+    PYTHONPATH=src python -m benchmarks.membership_churn 12     # quick
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.flag import FlagConfig
+from repro.data.pipeline import WorkerDataConfig, lm_worker_batches
+from repro.data.synthetic import SyntheticLM
+from repro.dist.aggregation import AggregatorConfig
+from repro.dist.membership import get_fault_schedule
+from repro.dist.train_step import TrainConfig, build_train_step, init_train_state
+from repro.optim import adamw, warmup_cosine
+
+W = 8
+SCENARIOS = (
+    ("none", {}),
+    ("crash", {"n": 2, "at": 10}),
+    ("rejoin", {"n": 2, "at": 8, "down": 10}),
+    ("churn", {"period": 4}),
+    ("straggle", {"n": 2, "every": 8, "duration": 3}),
+)
+
+
+def _one(scenario: str, kw: dict, agg: str, steps: int):
+    cfg = reduce_for_smoke(get_config("smollm-360m")).replace(
+        frontend=None, num_prefix_embeds=0)
+    sched_kw = dict(kw)
+    if scenario in ("churn", "straggle"):
+        sched_kw["horizon"] = steps
+    tc = TrainConfig(
+        aggregator=AggregatorConfig(
+            name=agg, f=2, flag=FlagConfig(lam=0.0, regularizer="none")),
+        attack="sign_flip", attack_f=1,
+        faults=get_fault_schedule(scenario, W, **sched_kw))
+    opt = adamw(weight_decay=0.0)
+    params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step_fn = jax.jit(build_train_step(
+        cfg, tc, opt, warmup_cosine(3e-3, steps, warmup=min(5, steps // 4))))
+    task = SyntheticLM(vocab_size=cfg.vocab_size)
+    wdc = WorkerDataConfig(workers=W, per_worker_batch=2)
+    active, loss = [], None
+    t0 = time.time()
+    for t in range(steps):
+        batch = lm_worker_batches(task, wdc, t, 32)
+        params, opt_state, m = step_fn(params, opt_state, batch,
+                                       jax.random.PRNGKey(t),
+                                       jnp.asarray(t, jnp.int32))
+        loss = float(m["loss"])
+        active.append(int(m.get("active_workers", W)))
+    wall = time.time() - t0
+    compiles = step_fn._cache_size()
+    assert compiles == 1, (
+        f"membership changes must not recompile: {scenario}/{agg} "
+        f"compiled {compiles}x")
+    return {"final_loss": loss, "mean_active": sum(active) / len(active),
+            "min_active": min(active), "us_per_step": wall / steps * 1e6,
+            "compiles": compiles}
+
+
+def run(steps: int = 40, aggs=("flag", "krum", "mean", "median")):
+    rows = [("name", "us_per_call", "derived")]
+    for scenario, kw in SCENARIOS:
+        for agg in aggs:
+            out = _one(scenario, kw, agg, steps)
+            rows.append((f"churn/{scenario}/{agg}",
+                         f"{out['us_per_step']:.0f}",
+                         f"loss={out['final_loss']:.4f} "
+                         f"act={out['mean_active']:.1f}/{W} "
+                         f"(min {out['min_active']}) "
+                         f"compiles={out['compiles']}"))
+            print(rows[-1])
+    emit(rows, "membership_churn")
+    return rows
+
+
+if __name__ == "__main__":
+    run(int(sys.argv[1]) if len(sys.argv) > 1 else 40)

@@ -13,8 +13,8 @@ import argparse
 import time
 
 from benchmarks import (byzantine_tolerance, batch_size, comm_loss,
-                        augmentation, lambda_sweep, wallclock,
-                        other_attacks, scalability)
+                        augmentation, lambda_sweep, membership_churn,
+                        wallclock, other_attacks, scalability)
 
 SUITES = {
     "byzantine_tolerance": lambda q: byzantine_tolerance.run(
@@ -32,6 +32,10 @@ SUITES = {
         (0.1, 1.0, 3.0, 7.0, 21.0)),
     "wallclock": lambda q: wallclock.run(
         ns=(10_000, 100_000) if q else (10_000, 100_000, 1_000_000)),
+    "membership_churn": lambda q: membership_churn.run(
+        steps=16 if q else 40,
+        aggs=("flag", "krum", "mean") if q
+        else ("flag", "krum", "mean", "median")),
     "other_attacks": lambda q: other_attacks.run(steps=20 if q else 35),
     "scalability": lambda q: scalability.run(steps=10 if q else 25),
 }

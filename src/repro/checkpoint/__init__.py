@@ -1,5 +1,13 @@
-"""Checkpointing: sharded-pytree save/restore (numpy .npz container)."""
+"""Checkpointing: crash-safe sharded-pytree save/restore (npz container).
 
-from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint, latest_step
+Format v2: atomic temp+rename for every file, per-process meta (no
+multi-writer clobber), and a size-carrying commit marker written last so
+``latest_step`` never returns a partially written step dir.  See
+docs/fault_tolerance.md for the protocol and resume invariants.
+"""
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+from repro.checkpoint.checkpoint import (checkpoint_meta, latest_step,
+                                         load_checkpoint, save_checkpoint)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "checkpoint_meta"]

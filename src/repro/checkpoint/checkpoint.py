@@ -1,12 +1,31 @@
-"""Pytree checkpointing without external deps.
+"""Crash-safe pytree checkpointing without external deps (format v2).
 
-Layout: ``<dir>/step_<N>/state.npz`` holding flattened leaves keyed by
-their tree paths, plus ``meta.json`` with the step and tree structure
-fingerprint.  Arrays are gathered to host (fine for the assigned scale of
-the CPU drivers; on a real pod you would write per-shard files — the
-function accepts a ``process_index`` suffix for that).  Atomic via
-write-to-temp + rename.  ``bfloat16`` leaves round-trip through a uint16
-view (numpy has no native bf16).
+Layout: ``<dir>/step_<N>/`` holding, per writing process ``i``:
+
+    state_<i>.npz     flattened leaves keyed by tree paths (bf16 leaves
+                      round-trip through a uint16 view — numpy has no
+                      native bf16)
+    meta_<i>.json     step, treedef fingerprint, bf16 keys, leaf keys,
+                      caller ``extra`` metadata (e.g. the LR horizon)
+    commit_<i>.json   completeness marker: written *last*, records the
+                      npz byte size
+
+Crash-safety protocol: every file is written to a temp name in the step
+dir and atomically renamed (``os.replace``), in the order npz -> meta ->
+commit.  A crash at any point leaves a step dir without a valid commit
+marker, which :func:`latest_step` and :func:`load_checkpoint` *skip* —
+resume always lands on the newest step whose write completed.  The marker
+stores the npz size, so a torn npz (e.g. a partial disk flush surviving a
+power cut) is also rejected.  Arrays are gathered to host (fine for the
+assigned scale of the CPU drivers; on a real pod each process writes its
+own shard files via ``process_index`` — meta is namespaced per process
+too, so concurrent writers never clobber each other's key manifests; v1
+wrote one shared ``meta.json`` whose ``keys`` reflected whichever writer
+landed last).
+
+v1 compatibility: dirs written by the old format (shared ``meta.json``,
+no marker) are still readable; they are treated as complete iff both
+their meta and state files exist.
 """
 
 from __future__ import annotations
@@ -21,6 +40,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+FORMAT_VERSION = 2
+
 
 def _flatten(tree):
     flat = jax.tree_util.tree_flatten_with_path(tree)
@@ -31,10 +52,59 @@ def _flatten(tree):
     return leaves, flat[1]
 
 
+def _atomic_write_bytes(path: str, data: bytes) -> None:
+    """Write ``data`` to ``path`` via temp file + atomic rename + fsync."""
+    d = os.path.dirname(path)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def _state_name(process_index: int) -> str:
+    return f"state_{process_index}.npz"
+
+
+def _meta_name(process_index: int) -> str:
+    return f"meta_{process_index}.json"
+
+
+def _commit_name(process_index: int) -> str:
+    return f"commit_{process_index}.json"
+
+
 def save_checkpoint(directory: str, step: int, tree, *,
-                    process_index: int = 0) -> str:
+                    process_index: int = 0, extra: dict | None = None) -> str:
+    """Atomically save ``tree`` as step ``step``.
+
+    Args:
+      directory: checkpoint root (created if missing).
+      step: global step the state corresponds to.
+      tree: arbitrary pytree of arrays (params, opt state, EF memory, ...).
+      process_index: shard suffix for multi-process writers; state, meta
+        and commit marker are all namespaced by it.
+      extra: small JSON-able metadata stored in the meta file and returned
+        by :func:`checkpoint_meta` — the train driver persists the LR
+        horizon (``total_steps``) here so a resumed run keeps the original
+        schedule.
+    Returns:
+      The step directory path.  The step only becomes visible to
+      :func:`latest_step` once the commit marker lands (written last,
+      atomically) — a crash mid-save leaves an ignorable partial dir.
+    """
     leaves, treedef = _flatten(tree)
-    step_dir = os.path.join(directory, f"step_{step:08d}")
+    step_dir = _step_dir(directory, step)
     os.makedirs(step_dir, exist_ok=True)
     arrays = {}
     bf16_keys = []
@@ -44,30 +114,88 @@ def save_checkpoint(directory: str, step: int, tree, *,
             a = a.view(np.uint16)
             bf16_keys.append(k)
         arrays[k] = a
-    fname = os.path.join(step_dir, f"state_{process_index}.npz")
+    fname = os.path.join(step_dir, _state_name(process_index))
     fd, tmp = tempfile.mkstemp(dir=step_dir, suffix=".tmp")
     os.close(fd)
-    with open(tmp, "wb") as f:
-        np.savez(f, **{k: v for k, v in arrays.items()})
-    shutil.move(tmp, fname)
-    meta = {"step": step, "treedef": str(treedef), "bf16": bf16_keys,
-            "keys": sorted(arrays)}
-    with open(os.path.join(step_dir, "meta.json"), "w") as f:
-        json.dump(meta, f)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **{k: v for k, v in arrays.items()})
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.move(tmp, fname)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    meta = {"format": FORMAT_VERSION, "step": step, "treedef": str(treedef),
+            "bf16": bf16_keys, "keys": sorted(arrays),
+            "extra": dict(extra or {})}
+    _atomic_write_bytes(os.path.join(step_dir, _meta_name(process_index)),
+                        json.dumps(meta).encode())
+    commit = {"step": step, "state_bytes": os.path.getsize(fname)}
+    _atomic_write_bytes(os.path.join(step_dir, _commit_name(process_index)),
+                        json.dumps(commit).encode())
     return step_dir
+
+
+def _is_complete(step_dir: str, process_index: int) -> bool:
+    """True iff the step dir holds a finished write for ``process_index``."""
+    state = os.path.join(step_dir, _state_name(process_index))
+    if not os.path.isfile(state):
+        return False
+    has_meta = (os.path.isfile(os.path.join(step_dir,
+                                            _meta_name(process_index)))
+                or os.path.isfile(os.path.join(step_dir, "meta.json")))
+    if not has_meta:
+        return False
+    marker = os.path.join(step_dir, _commit_name(process_index))
+    if os.path.isfile(marker):
+        try:
+            with open(marker) as f:
+                commit = json.load(f)
+            return os.path.getsize(state) == commit["state_bytes"]
+        except (ValueError, KeyError, OSError):
+            return False
+    # v1 fallback: shared meta.json, no marker — both files existing is the
+    # best completeness signal that format offers.
+    return os.path.isfile(os.path.join(step_dir, "meta.json"))
+
+
+def _read_meta(step_dir: str, process_index: int) -> dict:
+    path = os.path.join(step_dir, _meta_name(process_index))
+    if not os.path.isfile(path):          # v1 layout
+        path = os.path.join(step_dir, "meta.json")
+    with open(path) as f:
+        meta = json.load(f)
+    meta.setdefault("format", 1)
+    meta.setdefault("extra", {})
+    return meta
+
+
+def checkpoint_meta(directory: str, *, step: int | None = None,
+                    process_index: int = 0) -> dict:
+    """Meta dict (incl. ``extra``) of a step (default: latest complete)."""
+    if step is None:
+        step = latest_step(directory, process_index=process_index)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    return _read_meta(_step_dir(directory, step), process_index)
 
 
 def load_checkpoint(directory: str, template, *, step: int | None = None,
                     process_index: int = 0):
-    """Restore into the structure of ``template`` (shapes validated)."""
+    """Restore into the structure of ``template`` (shapes validated).
+
+    ``step=None`` resumes from the newest *complete* step — partially
+    written dirs (crash mid-save) are skipped, not crashed on.
+    """
     if step is None:
-        step = latest_step(directory)
+        step = latest_step(directory, process_index=process_index)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
-    step_dir = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(step_dir, "meta.json")) as f:
-        meta = json.load(f)
-    data = np.load(os.path.join(step_dir, f"state_{process_index}.npz"))
+    step_dir = _step_dir(directory, step)
+    meta = _read_meta(step_dir, process_index)
+    data = np.load(os.path.join(step_dir, _state_name(process_index)))
     leaves, _ = _flatten(template)
     out = {}
     for k, tmpl in leaves.items():
@@ -84,9 +212,27 @@ def load_checkpoint(directory: str, template, *, step: int | None = None,
     return jax.tree_util.tree_unflatten(flat[1], rebuilt), meta["step"]
 
 
-def latest_step(directory: str) -> int | None:
+def latest_step(directory: str, *, process_index: int = 0,
+                process_count: int | None = None) -> int | None:
+    """Newest step with a *complete* write for ``process_index`` (or None).
+
+    Incomplete dirs — no commit marker, or an npz whose size disagrees
+    with the marker (torn write) — are skipped, so a crash mid-save can
+    never be resumed from.
+
+    Multi-process runs must pass ``process_count``: a step then counts
+    only when complete for *every* process 0..process_count-1, so all
+    restarting processes agree on the resume step even if the job died
+    between two writers' commits (per-index completeness alone would let
+    them resume from different steps and silently diverge).
+    """
     if not os.path.isdir(directory):
         return None
     steps = [int(m.group(1)) for d in os.listdir(directory)
              if (m := re.fullmatch(r"step_(\d+)", d))]
-    return max(steps) if steps else None
+    indices = (range(process_count) if process_count is not None
+               else (process_index,))
+    complete = [s for s in sorted(steps, reverse=True)
+                if all(_is_complete(_step_dir(directory, s), i)
+                       for i in indices)]
+    return complete[0] if complete else None

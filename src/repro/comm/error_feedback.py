@@ -45,7 +45,7 @@ def init_ef(params, workers: int):
         lambda p: jnp.zeros((workers,) + p.shape, jnp.float32), params)
 
 
-def ef_encode_decode(codec: Codec, grads, ef):
+def ef_encode_decode(codec: Codec, grads, ef, mask=None):
     """One EF round: compensate, encode, decode, update the memory.
 
     Args:
@@ -53,6 +53,12 @@ def ef_encode_decode(codec: Codec, grads, ef):
       grads: worker-major gradient pytree (leaves ``(W, ...)``).
       ef: EF memory from :func:`init_ef` (same structure), or ``None`` to
         run the codec without compensation.
+      mask: optional (W,) active-worker membership (bool or 0/1 float; see
+        :mod:`repro.dist.membership`).  An inactive worker transmits
+        nothing this round, so its memory must neither telescope nor be
+        clobbered by whatever its masked-out gradient slot holds — its EF
+        entry is *frozen* and resumes exactly where it left off when the
+        worker rejoins.
     Returns:
       ``(decoded, payload, new_ef)`` — the decoded worker-major estimates
       the aggregator consumes, the raw payload (for gram-feeding codecs /
@@ -62,6 +68,15 @@ def ef_encode_decode(codec: Codec, grads, ef):
     h = jax.tree.map(jnp.add, f32, ef) if ef is not None else f32
     payload = codec.encode(h)
     decoded = codec.decode(payload, h)
-    new_ef = (jax.tree.map(jnp.subtract, h, decoded)
-              if ef is not None else None)
+    if ef is None:
+        return decoded, payload, None
+    new_ef = jax.tree.map(jnp.subtract, h, decoded)
+    if mask is not None:
+        keep = mask.astype(bool)
+
+        def freeze(new, old):
+            sel = keep.reshape((keep.shape[0],) + (1,) * (new.ndim - 1))
+            return jnp.where(sel, new, old)
+
+        new_ef = jax.tree.map(freeze, new_ef, ef)
     return decoded, payload, new_ef

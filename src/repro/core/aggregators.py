@@ -30,6 +30,9 @@ __all__ = [
     "multi_krum", "bulyan", "pca_topm", "geometric_median", "flag",
     "get_aggregator", "AGGREGATORS", "pairwise_sq_dists", "krum_scores",
     "mean_around", "bulyan_select", "sq_dists_from_gram",
+    "masked_median", "masked_trimmed_mean", "masked_mean_around",
+    "masked_krum_scores", "masked_selection_weights", "masked_bulyan_select",
+    "MASKED_COORDWISE",
 ]
 
 
@@ -161,6 +164,163 @@ def bulyan(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
     picks = bulyan_select(pairwise_sq_dists(Gw), f)
     S = Gw[picks]                                      # (theta, n)
     return mean_around(S, jnp.median(S, axis=0), beta)
+
+
+# ---------------------------------------------------------------------------
+# masked (dynamic worker subset) variants — the membership layer
+# ---------------------------------------------------------------------------
+#
+# Each rule re-expressed over the *active* workers of a (W, ...) stack with a
+# traced (W,) membership mask: the worker axis keeps its static size W, the
+# active count W_a = sum(mask) is a traced value, and dynamic order
+# statistics are realized as sort + gather-at-traced-index.  Membership
+# changes therefore never change any array shape — the same compiled program
+# serves every subset (asserted via compile counting in
+# tests/test_membership.py), and each masked rule equals its unmasked
+# counterpart applied to the active submatrix (also asserted there).
+
+def _masked_count(mask: jnp.ndarray) -> jnp.ndarray:
+    """Active-worker count as a traced int32 (at least 1)."""
+    return jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1)
+
+
+def masked_median(Gw: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-coordinate median over the active rows of ``Gw (W, n)``."""
+    S = jnp.sort(jnp.where(mask.astype(bool)[:, None], Gw, jnp.inf), axis=0)
+    wa = _masked_count(mask)
+    return 0.5 * (S[(wa - 1) // 2] + S[wa // 2])
+
+
+def masked_trimmed_mean(Gw: jnp.ndarray, mask: jnp.ndarray, *,
+                        f: int = 1) -> jnp.ndarray:
+    """Per-coordinate trimmed mean over active rows: drop the f largest and
+    f smallest active values (f capped at (W_a - 1) // 2, as unmasked)."""
+    wa = _masked_count(mask)
+    k = jnp.minimum(f, (wa - 1) // 2)
+    S = jnp.sort(jnp.where(mask.astype(bool)[:, None], Gw, jnp.inf), axis=0)
+    r = jnp.arange(Gw.shape[0])[:, None]
+    sel = (r >= k) & (r < wa - k)
+    return (jnp.sum(jnp.where(sel, S, 0.0), axis=0)
+            / jnp.maximum(wa - 2 * k, 1))
+
+
+def masked_mean_around(Gw: jnp.ndarray, center: jnp.ndarray,
+                       k: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean of the ``k`` active values closest to ``center``, per coordinate
+    (``k`` may be traced; inactive rows sort to +inf distance)."""
+    d = jnp.where(mask.astype(bool)[:, None],
+                  jnp.abs(Gw - center[None, :]), jnp.inf)
+    order = jnp.argsort(d, axis=0)
+    gathered = jnp.take_along_axis(Gw, order, axis=0)
+    sel = jnp.arange(Gw.shape[0])[:, None] < k
+    return jnp.sum(jnp.where(sel, gathered, 0.0), axis=0) / jnp.maximum(k, 1)
+
+
+def _masked_meamed(Gw, mask, *, f=1):
+    wa = _masked_count(mask)
+    return masked_mean_around(Gw, masked_median(Gw, mask),
+                              jnp.maximum(wa - f, 1), mask)
+
+
+def _masked_phocas(Gw, mask, *, f=1):
+    wa = _masked_count(mask)
+    return masked_mean_around(Gw, masked_trimmed_mean(Gw, mask, f=f),
+                              jnp.maximum(wa - f, 1), mask)
+
+
+MASKED_COORDWISE: dict[str, Callable] = {
+    "median": lambda Gw, mask, *, f=1: masked_median(Gw, mask),
+    "trimmed_mean": masked_trimmed_mean,
+    "meamed": _masked_meamed,
+    "phocas": _masked_phocas,
+}
+
+
+def masked_krum_scores(D2: jnp.ndarray, f: int,
+                       mask: jnp.ndarray) -> jnp.ndarray:
+    """Krum scores over the active subset: each active worker sums its
+    W_a - f - 2 smallest squared distances to *other active* workers
+    (dynamic count via sort + cumulative positional mask); inactive
+    workers score +inf."""
+    W = D2.shape[0]
+    mb = mask.astype(bool)
+    wa = _masked_count(mask)
+    valid = (mb[:, None] & mb[None, :]
+             & ~jnp.eye(W, dtype=bool))
+    S = jnp.sort(jnp.where(valid, D2, jnp.inf), axis=1)
+    kk = jnp.clip(wa - f - 2, 1, jnp.maximum(wa - 1, 1))
+    # active rows hold exactly W_a - 1 finite entries, and kk <= W_a - 1,
+    # so the selected prefix is finite; inactive rows are all-inf -> inf.
+    return jnp.sum(jnp.where(jnp.arange(W)[None, :] < kk, S, 0.0), axis=1)
+
+
+def masked_selection_weights(D2: jnp.ndarray, name: str, f: int,
+                             mask: jnp.ndarray) -> jnp.ndarray:
+    """Krum / Multi-Krum combination weights over the active subset.
+
+    Degenerate quorums stay safe: with a single active worker its score is
+    +inf (it has no active peers to sum distances over), so scores are
+    re-finited for active workers before the argmin/rank — selection can
+    then never land on an inactive worker, and an all-inactive mask
+    yields the zero weight vector (a no-op update) rather than silently
+    applying a departed worker's garbage slot.
+    """
+    W = D2.shape[0]
+    mb = mask.astype(bool)
+    s = masked_krum_scores(D2, f, mask)
+    s = jnp.where(mb, jnp.where(jnp.isfinite(s), s, 0.0), jnp.inf)
+    if name == "krum":
+        return (jax.nn.one_hot(jnp.argmin(s), W, dtype=D2.dtype)
+                * mask.astype(D2.dtype))
+    wa = _masked_count(mask)
+    q = jnp.clip(wa - f - 2, 1, wa)
+    rank = jnp.argsort(jnp.argsort(s))            # inactive (inf) rank last
+    return (jnp.where(rank < q, 1.0 / q, 0.0)
+            * mask.astype(D2.dtype)).astype(D2.dtype)
+
+
+def masked_bulyan_select(D2_all: jnp.ndarray, f: int, mask: jnp.ndarray):
+    """Bulyan's recursive selection over the active subset.
+
+    Mirrors :func:`bulyan_select` exactly on the active submatrix: already-
+    selected workers keep contributing the finite ``big`` sentinel to every
+    row's score sum (same count per row, so ordering is decided by the real
+    part), while *inactive* workers are excluded outright (+inf, never
+    summed).  Runs W static rounds; rounds past theta = W_a - 2f are
+    discarded via the take flag.
+
+    Returns:
+      ``(selected, theta)`` — a (W,) bool mask of the theta chosen workers
+      and the traced selection count.
+    """
+    W = D2_all.shape[0]
+    mb = mask.astype(bool)
+    wa = _masked_count(mask)
+    theta = jnp.clip(wa - 2 * f, 1, wa)
+    kk = jnp.clip(wa - f - 2, 1, jnp.maximum(wa - 1, 1))
+    active_pairs = mb[:, None] & mb[None, :] & ~jnp.eye(W, dtype=bool)
+    big = 4.0 * jnp.max(jnp.where(active_pairs, D2_all, 0.0)) + 1.0
+
+    def select_one(carry, r):
+        avail = carry                                  # bool, still available
+        valid = avail[:, None] & avail[None, :] & ~jnp.eye(W, dtype=bool)
+        D2 = jnp.where(active_pairs,
+                       jnp.where(valid, D2_all, big), jnp.inf)
+        S = jnp.sort(D2, axis=1)
+        s = jnp.sum(jnp.where(jnp.arange(W)[None, :] < kk, S, 0.0), axis=1)
+        # a lone available worker has no peers to score against (+inf);
+        # re-finite available scores so argmin can only land on one, and
+        # only take picks that are genuinely available (an all-inactive
+        # mask then selects nobody instead of worker 0's garbage slot).
+        s = jnp.where(avail, jnp.where(jnp.isfinite(s), s, 0.0), jnp.inf)
+        pick = jnp.argmin(s)
+        take = (r < theta) & avail[pick]
+        avail = avail & ~((jnp.arange(W) == pick) & take)
+        return avail, (pick, take)
+
+    _, (picks, takes) = jax.lax.scan(select_one, mb, jnp.arange(W))
+    selected = jnp.zeros((W,), bool).at[picks].max(takes)
+    return selected, theta
 
 
 # ---------------------------------------------------------------------------

@@ -187,13 +187,33 @@ def flag_aggregate(G: jnp.ndarray, cfg: FlagConfig = FlagConfig()):
     return d, aux
 
 
-def effective_norms(norms: jnp.ndarray, mode: str) -> jnp.ndarray:
-    """Worker norms used in the final combine (see FlagConfig.norm_mode)."""
+def masked_median_1d(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Median of ``x[mask]`` with a *dynamic* active count (jit-safe).
+
+    Inactive entries sort to +inf; the two middle order statistics are
+    gathered at traced indices, so the active-worker count can change
+    step to step without recompiling.
+    """
+    s = jnp.sort(jnp.where(mask.astype(bool), x, jnp.inf))
+    na = jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1)
+    return 0.5 * (s[(na - 1) // 2] + s[na // 2])
+
+
+def effective_norms(norms: jnp.ndarray, mode: str,
+                    mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Worker norms used in the final combine (see FlagConfig.norm_mode).
+
+    With ``mask`` (active-worker membership, see repro.dist.membership) the
+    median is taken over active workers only and inactive entries are
+    zeroed — an inactive worker must contribute nothing to the combine.
+    """
+    if mode not in ("raw", "clip", "unit"):
+        raise ValueError(f"unknown norm_mode {mode!r}")
     if mode == "raw":
-        return norms
-    med = jnp.median(norms)
-    if mode == "clip":
-        return jnp.minimum(norms, med)
-    if mode == "unit":
-        return jnp.full_like(norms, med)
-    raise ValueError(f"unknown norm_mode {mode!r}")
+        out = norms
+    else:
+        med = (jnp.median(norms) if mask is None
+               else masked_median_1d(norms, mask))
+        out = jnp.minimum(norms, med) if mode == "clip" \
+            else jnp.full_like(norms, med)
+    return out if mask is None else out * mask.astype(norms.dtype)

@@ -112,12 +112,24 @@ def gram_matrix(G: jnp.ndarray) -> jnp.ndarray:
     return Gf.T @ Gf
 
 
-def _normalized_gram(K: jnp.ndarray, eps: float):
-    """(Kt, nu): unit-diagonal normalized Gram + worker norms."""
+def _normalized_gram(K: jnp.ndarray, eps: float,
+                     mask: jnp.ndarray | None = None):
+    """(Kt, nu): unit-diagonal normalized Gram + worker norms.
+
+    With ``mask`` (float (p,), 1 = active) inactive workers become
+    *phantom* columns: their rows/cols of Kt are zeroed and their diagonal
+    set to 1, i.e. each phantom is a unit vector orthogonal to everything.
+    Phantoms then carry zero objective coefficient in both solvers, so the
+    active block of every downstream quantity equals the solver run on the
+    active submatrix alone (asserted in tests/test_membership.py).
+    """
     p = K.shape[0]
     nu = jnp.sqrt(jnp.clip(jnp.diag(K), eps))
     Kt = K / (nu[:, None] * nu[None, :])
-    # exact unit diagonal (guards eigh/cholesky conditioning):
+    if mask is not None:
+        Kt = Kt * (mask[:, None] * mask[None, :])
+    # exact unit diagonal (guards eigh/cholesky conditioning; also sets the
+    # phantom diagonal):
     Kt = Kt - jnp.diag(jnp.diag(Kt)) + jnp.eye(p, dtype=K.dtype)
     return Kt, nu
 
@@ -126,23 +138,42 @@ def _has_pairs(cfg: FlagConfig, p: int) -> bool:
     return cfg.regularizer == "pairwise" and cfg.lam > 0.0 and p > 1
 
 
-def _mixing(K: jnp.ndarray, cfg: FlagConfig, eps: float):
-    """Normalized Gram Kt, mixing matrix A, and per-column coefficients."""
+def _active_count(mask: jnp.ndarray | None, p: int):
+    """Dynamic active-worker count (float); the static p when unmasked."""
+    if mask is None:
+        return jnp.asarray(float(p), jnp.float32)
+    return jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _mixing(K: jnp.ndarray, cfg: FlagConfig, eps: float,
+            mask: jnp.ndarray | None = None):
+    """Normalized Gram Kt, mixing matrix A, and per-column coefficients.
+
+    With ``mask``, inactive workers' data columns and every pair touching
+    an inactive worker get coefficient 0 (their IRLS weight is then exactly
+    0, so they never enter the weighted column Gram), and the pairwise
+    coefficient becomes lambda / (W_active - 1) — a traced scalar, so
+    membership changes never trigger a recompile.
+    """
     p = K.shape[0]
-    Kt, nu = _normalized_gram(K, eps)
+    Kt, nu = _normalized_gram(K, eps, mask)
     eye = jnp.eye(p, dtype=K.dtype)
+    wa = _active_count(mask, p)
+    data_coef = (jnp.ones((p,), K.dtype) if mask is None
+                 else mask.astype(K.dtype))
     if _has_pairs(cfg, p):
         ii, jj = jnp.triu_indices(p, k=1)
         d2 = jnp.clip(2.0 - 2.0 * Kt[ii, jj], 0.0)
         inv_d = jnp.where(d2 > 1e-12, jax.lax.rsqrt(jnp.maximum(d2, 1e-12)), 0.0)
         Apairs = (eye[:, ii] - eye[:, jj]) * inv_d[None, :]   # (p, npairs)
         A = jnp.concatenate([eye, Apairs], axis=1)
-        coef = jnp.concatenate(
-            [jnp.ones((p,), K.dtype),
-             jnp.full((ii.shape[0],), cfg.lam / (p - 1), K.dtype)])
+        pair_coef = cfg.lam / jnp.maximum(wa - 1.0, 1.0)
+        pair_valid = (jnp.ones((ii.shape[0],), K.dtype) if mask is None
+                      else mask[ii] * mask[jj])
+        coef = jnp.concatenate([data_coef, pair_coef * pair_valid])
     else:
         A = eye
-        coef = jnp.ones((p,), K.dtype)
+        coef = data_coef
     return Kt, nu, A, coef
 
 
@@ -156,11 +187,12 @@ def _safe_inv(lam: jnp.ndarray, eps: float) -> jnp.ndarray:
 # oracle: O(p^6)/iteration — see module docstring)
 # ---------------------------------------------------------------------------
 
-def _fa_weights_qspace(K: jnp.ndarray, cfg: FlagConfig):
+def _fa_weights_qspace(K: jnp.ndarray, cfg: FlagConfig,
+                       mask: jnp.ndarray | None = None):
     p = K.shape[0]
     m = cfg.m if cfg.m is not None else default_m(p)
     eps = cfg.eps
-    Kt, nu, A, coef = _mixing(K, cfg, eps)
+    Kt, nu, A, coef = _mixing(K, cfg, eps, mask)
     S = A.T @ Kt @ A                       # (q, q), Gram of unit columns
 
     def eig_top_m(u):
@@ -202,8 +234,10 @@ def _fa_weights_qspace(K: jnp.ndarray, cfg: FlagConfig):
     B = A * su[None, :]                    # (p, q) = A diag(su)
     P = (Vm * _safe_inv(lam_m, eps)[None, :]) @ Vm.T   # (q, q)
     W = B @ P @ (B.T @ Kt)                 # (p, p)
-    nu_eff = effective_norms(nu, cfg.norm_mode)
-    c = (W @ nu_eff) / (nu * p)
+    nu_eff = effective_norms(nu, cfg.norm_mode, mask)
+    c = (W @ nu_eff) / (nu * _active_count(mask, p))
+    if mask is not None:
+        c = c * mask
     if cfg.renormalize:  # FA-N (see FlagConfig)
         c = c / jnp.maximum(jnp.abs(jnp.sum(c)), 1e-6)
 
@@ -224,7 +258,8 @@ def _fa_weights_qspace(K: jnp.ndarray, cfg: FlagConfig):
 # docstring for the derivation)
 # ---------------------------------------------------------------------------
 
-def _fa_weights_rank_p(K: jnp.ndarray, cfg: FlagConfig):
+def _fa_weights_rank_p(K: jnp.ndarray, cfg: FlagConfig,
+                       mask: jnp.ndarray | None = None):
     p = K.shape[0]
     m = cfg.m if cfg.m is not None else default_m(p)
     if m > p:
@@ -233,8 +268,9 @@ def _fa_weights_rank_p(K: jnp.ndarray, cfg: FlagConfig):
             "subspace lies in span(G)); use solver='qspace' only as a "
             "debugging oracle")
     eps = cfg.eps
-    Kt, nu = _normalized_gram(K, eps)
+    Kt, nu = _normalized_gram(K, eps, mask)
     has_pairs = _has_pairs(cfg, p)
+    wa = _active_count(mask, p)
     # Cholesky jitter (see below) — also enters the pair normalization.
     delta = 10.0 * eps
 
@@ -252,13 +288,23 @@ def _fa_weights_rank_p(K: jnp.ndarray, cfg: FlagConfig):
         d2 = jnp.clip(2.0 - 2.0 * Kt, 0.0)
         inv_d2 = jnp.where(d2 > 1e-12, 1.0 / (d2 + 2.0 * delta), 0.0)
         inv_d2 = inv_d2 - jnp.diag(jnp.diag(inv_d2))
-        coef_pair = jnp.asarray(cfg.lam / (p - 1), K.dtype)
+        coef_pair = (cfg.lam / jnp.maximum(wa - 1.0, 1.0)).astype(K.dtype)
         pair_mask = jnp.triu(jnp.ones((p, p), K.dtype), k=1)
     else:
         inv_d2 = jnp.zeros((p, p), K.dtype)
         coef_pair = jnp.asarray(0.0, K.dtype)
         pair_mask = jnp.zeros((p, p), K.dtype)
     coef_data = jnp.ones((p,), K.dtype)
+    if mask is not None:
+        # Membership masking: inactive workers' data columns carry zero
+        # coefficient and every pair touching one is dropped from the edge
+        # set — the masked Kt already made their d2 degenerate (phantoms
+        # are mutually orthogonal, d2 = 2), so inv_d2 must be zeroed
+        # explicitly, not relied on to vanish.
+        mm = mask[:, None] * mask[None, :]
+        inv_d2 = inv_d2 * mm
+        pair_mask = pair_mask * mm
+        coef_data = mask.astype(K.dtype)
 
     # Symmetrizer: Kt + delta I = L L^T.  The jitter bounds the Cholesky
     # away from fp32 rounding (Kt is PSD up to ~p*ulp) and gives
@@ -313,11 +359,13 @@ def _fa_weights_rank_p(K: jnp.ndarray, cfg: FlagConfig):
     it, _, Qm = jax.lax.while_loop(
         cond, body, (jnp.asarray(0), jnp.asarray(False), Q0))
 
-    # Final combine:  c~ = (1/p) L^{-T} Qm Qm^T L^{-1} Kt nu',  c = c~/nu.
-    nu_eff = effective_norms(nu, cfg.norm_mode)
+    # Final combine:  c~ = (1/W_a) L^{-T} Qm Qm^T L^{-1} Kt nu',  c = c~/nu.
+    nu_eff = effective_norms(nu, cfg.norm_mode, mask)
     s = solve_triangular(L, Kt @ nu_eff, lower=True)
     ct = solve_triangular(L, Qm @ (Qm.T @ s), lower=True, trans=1)
-    c = ct / (nu * p)
+    c = ct / (nu * wa)
+    if mask is not None:
+        c = c * mask
     if cfg.renormalize:  # FA-N (see FlagConfig)
         c = c / jnp.maximum(jnp.abs(jnp.sum(c)), 1e-6)
 
@@ -339,7 +387,8 @@ def _fa_weights_rank_p(K: jnp.ndarray, cfg: FlagConfig):
 
 @partial(jax.jit, static_argnames=("cfg", "solver"))
 def fa_weights_from_gram(K: jnp.ndarray, cfg: FlagConfig = FlagConfig(), *,
-                         solver: str = "rank_p"):
+                         solver: str = "rank_p",
+                         mask: jnp.ndarray | None = None):
     """FA combination weights c from the Gram matrix only.
 
     Args:
@@ -348,15 +397,24 @@ def fa_weights_from_gram(K: jnp.ndarray, cfg: FlagConfig = FlagConfig(), *,
       solver: ``'rank_p'`` (default — p x p eigh per IRLS iteration, no
         q-sized intermediate) or ``'qspace'`` (the original q x q
         derivation, q = p + p(p-1)/2, retained as a cross-check oracle).
+      mask: optional (p,) active-worker membership (bool or 0/1 float, a
+        *traced* value — membership changes never recompile).  Inactive
+        workers become zero-coefficient phantom columns: the solve on the
+        active block equals the solver run on the active submatrix (exact
+        whenever m <= W_active; with fewer active workers than subspace
+        dims the extra directions are degenerate but the weights stay
+        finite and masked), and c is zero at inactive workers.
     Returns:
       (c, aux): c (p,) with  d = G @ c  reproducing Algorithm 1's update;
       aux holds per-worker explained variance, IRLS iterations, objective.
     """
     K = K.astype(jnp.float32)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
     if solver == "rank_p":
-        return _fa_weights_rank_p(K, cfg)
+        return _fa_weights_rank_p(K, cfg, mask)
     if solver == "qspace":
-        return _fa_weights_qspace(K, cfg)
+        return _fa_weights_qspace(K, cfg, mask)
     raise ValueError(f"unknown solver {solver!r}; have {SOLVERS}")
 
 

@@ -6,20 +6,29 @@ model substrate imports it, and ``train_step``/``serve_step`` sit on top of
 the models):
 
   sharding     — ``shard`` logical-axis constraints + ``use_sharding`` context
+  membership   — elastic worker membership: ``FaultSchedule`` outage events
+                 (crash / leave+rejoin / churn / straggle, mirroring the
+                 attacks registry) -> in-graph (W,) active mask + staleness
+                 counters, a pure function of the step index
   aggregation  — ``aggregate_tree``: Byzantine-robust pytree aggregation that
                  routes FA (and every Gram-computable baseline) through the
                  p x p Gram matrix, never materializing the flat (W, n) stack;
                  ``compressed_aggregate`` wraps it with the ``repro.comm``
-                 worker->server codecs (sketch payloads feed the Gram path)
+                 worker->server codecs (sketch payloads feed the Gram path);
+                 both take a membership ``mask`` so every rule operates on a
+                 dynamic worker subset without recompiling
   train_step   — vmapped per-worker grads -> attack injection -> compression
                  -> aggregation -> optimizer update, as one pure function
-                 (EF memory threads through as an explicit carry)
+                 (EF memory threads through as an explicit carry; a
+                 ``TrainConfig.faults`` schedule masks the round in-graph)
   serve_step   — one-token greedy decode step + the batched decode loop
 """
 
 from repro.dist import sharding
+from repro.dist import membership
 from repro.dist import aggregation
 from repro.dist import train_step
 from repro.dist import serve_step
 
-__all__ = ["sharding", "aggregation", "train_step", "serve_step"]
+__all__ = ["sharding", "membership", "aggregation", "train_step",
+           "serve_step"]

@@ -173,19 +173,22 @@ def tree_combine(tree, c: jnp.ndarray, *, impl: str = "xla"):
 # Gram-space combination weights per rule
 # ---------------------------------------------------------------------------
 
-def _geomed_weights(K: jnp.ndarray, n_iter: int = 8,
-                    eps: float = 1e-8) -> jnp.ndarray:
+def _geomed_weights(K: jnp.ndarray, n_iter: int = 8, eps: float = 1e-8,
+                    mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Weiszfeld in weight space: z = G^T w stays in span(G), so
     ||g_i - z||^2 = K_ii - 2 (K w)_i + w^T K w.  Iterates identically to
-    ``aggregators.geometric_median`` (init w = 1/p == init z = mean)."""
+    ``aggregators.geometric_median`` (init w = 1/p == init z = mean).
+    With ``mask`` the weight support stays on active workers — every
+    iterate is then the Weiszfeld step of the active submatrix."""
     p = K.shape[0]
-    w0 = jnp.full((p,), 1.0 / p, K.dtype)
+    m = jnp.ones((p,), K.dtype) if mask is None else mask.astype(K.dtype)
+    w0 = m / jnp.maximum(jnp.sum(m), 1.0)
 
     def body(w, _):
         Kw = K @ w
         d2 = jnp.clip(jnp.diag(K) - 2.0 * Kw + w @ Kw, eps)
-        r = jax.lax.rsqrt(d2)
-        return r / jnp.sum(r), None
+        r = jax.lax.rsqrt(d2) * m
+        return r / jnp.maximum(jnp.sum(r), 1e-30), None
 
     w, _ = jax.lax.scan(body, w0, None, length=n_iter)
     return w
@@ -203,21 +206,32 @@ def _selection_weights(K: jnp.ndarray, name: str, f: int) -> jnp.ndarray:
     return jnp.zeros((p,), K.dtype).at[idx].add(1.0 / q)
 
 
-def _gram_weights(K: jnp.ndarray, cfg: AggregatorConfig):
-    """(c, aux) for every rule expressible as a fixed combine d = G^T c."""
+def _gram_weights(K: jnp.ndarray, cfg: AggregatorConfig,
+                  mask: jnp.ndarray | None = None):
+    """(c, aux) for every rule expressible as a fixed combine d = G^T c.
+
+    ``mask`` restricts every rule to the active worker subset (masked Gram
+    rows — see repro.dist.membership); c is zero at inactive workers.
+    """
     p = K.shape[0]
     if cfg.name == "flag":
-        return fa_weights_from_gram(K, cfg.flag)
+        return fa_weights_from_gram(K, cfg.flag, mask=mask)
     if cfg.name == "pca":
         pca_cfg = FlagConfig(m=cfg.flag.m, lam=0.0, regularizer="none",
                              n_iter=1)
-        return fa_weights_from_gram(K, pca_cfg)
+        return fa_weights_from_gram(K, pca_cfg, mask=mask)
     if cfg.name == "mean":
-        return jnp.full((p,), 1.0 / p, K.dtype), {}
+        if mask is None:
+            return jnp.full((p,), 1.0 / p, K.dtype), {}
+        m = mask.astype(K.dtype)
+        return m / jnp.maximum(jnp.sum(m), 1.0), {}
     if cfg.name == "geomed":
-        return _geomed_weights(K), {}
+        return _geomed_weights(K, mask=mask), {}
     if cfg.name in ("krum", "multi_krum"):
-        return _selection_weights(K, cfg.name, cfg.f), {}
+        if mask is None:
+            return _selection_weights(K, cfg.name, cfg.f), {}
+        return aggregators.masked_selection_weights(
+            aggregators.sq_dists_from_gram(K), cfg.name, cfg.f, mask), {}
     raise KeyError(cfg.name)
 
 
@@ -226,7 +240,7 @@ GRAM_RULES = frozenset({"flag", "pca", "mean", "geomed", "krum",
 COORDWISE_RULES = frozenset({"median", "trimmed_mean", "meamed", "phocas"})
 
 
-def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None):
+def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None):
     """Aggregate a worker-major gradient pytree.
 
     Args:
@@ -239,6 +253,12 @@ def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None):
         come from the sketch Gram, the combine still uses the exact local
         gradients.  Coordinate-wise rules have no Gram stage, so passing
         ``gram`` for them is an error rather than a silent no-op.
+      mask: optional (W,) active-worker membership (bool or 0/1 float, a
+        *traced* value — see :mod:`repro.dist.membership`).  Every rule
+        then operates on the active subset only: masked Gram rows for the
+        FA/Krum family, masked leaves with dynamic order statistics for
+        the coordinate rules.  Shapes are unchanged, so membership changes
+        never recompile; inactive workers get combine weight exactly 0.
     Returns:
       ``(d_tree, aux)`` — ``d_tree`` has the worker axis reduced away (same
       treedef, leaf shapes ``(...)``); ``aux['weights']`` always holds a
@@ -253,23 +273,33 @@ def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None):
     if gram is not None and cfg.name in COORDWISE_RULES:
         raise ValueError(f"aggregator {cfg.name!r} is coordinate-wise and "
                          "cannot consume a precomputed Gram matrix")
+    if mask is not None:
+        mask = jnp.asarray(mask).astype(jnp.float32)
 
     if cfg.name in GRAM_RULES:
         K = gram if gram is not None else tree_gram(
             tree, cfg.sketch_stride, gram_dtype=cfg.gram_dtype,
             impl=cfg.impl)
-        c, aux = _gram_weights(K, cfg)
+        c, aux = _gram_weights(K, cfg, mask)
         d = tree_combine(tree, c, impl=cfg.impl)
         return d, {**aux, "weights": c}
 
     if cfg.name in COORDWISE_RULES:
         # Coordinate-wise rules commute with the pytree split: leafwise
         # application == the flat reference on the concatenated matrix.
-        fn = aggregators.get_aggregator(cfg.name)
+        if mask is None:
+            fn = aggregators.get_aggregator(cfg.name)
+            d = jax.tree.map(
+                lambda g: fn(g.reshape(W, -1), f=cfg.f).reshape(g.shape[1:]),
+                tree)
+            return d, {"weights": jnp.full((W,), 1.0 / W, jnp.float32)}
+        mfn = aggregators.MASKED_COORDWISE[cfg.name]
         d = jax.tree.map(
-            lambda g: fn(g.reshape(W, -1), f=cfg.f).reshape(g.shape[1:]),
+            lambda g: mfn(g.reshape(W, -1), mask, f=cfg.f
+                          ).reshape(g.shape[1:]),
             tree)
-        return d, {"weights": jnp.full((W,), 1.0 / W, jnp.float32)}
+        wa = jnp.maximum(jnp.sum(mask), 1.0)
+        return d, {"weights": mask / wa}
 
     if cfg.name == "bulyan":
         # Selection is distance-only -> Gram space; the final trimmed mean
@@ -277,19 +307,33 @@ def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None):
         K = gram if gram is not None else tree_gram(
             tree, cfg.sketch_stride, gram_dtype=cfg.gram_dtype,
             impl=cfg.impl)
-        picks = aggregators.bulyan_select(
-            aggregators.sq_dists_from_gram(K), cfg.f)
-        theta = picks.shape[0]
-        beta = max(theta - 2 * cfg.f, 1)
+        D2 = aggregators.sq_dists_from_gram(K)
+        if mask is None:
+            picks = aggregators.bulyan_select(D2, cfg.f)
+            theta = picks.shape[0]
+            beta = max(theta - 2 * cfg.f, 1)
 
-        def one(g):
-            S = g.reshape(W, -1)[picks]
-            return aggregators.mean_around(
-                S, jnp.median(S, axis=0), beta).reshape(g.shape[1:])
+            def one(g):
+                S = g.reshape(W, -1)[picks]
+                return aggregators.mean_around(
+                    S, jnp.median(S, axis=0), beta).reshape(g.shape[1:])
 
-        d = jax.tree.map(one, tree)
-        c = jnp.zeros((W,), jnp.float32).at[picks].add(1.0 / theta)
-        return d, {"weights": c}
+            d = jax.tree.map(one, tree)
+            c = jnp.zeros((W,), jnp.float32).at[picks].add(1.0 / theta)
+            return d, {"weights": c}
+
+        selected, theta = aggregators.masked_bulyan_select(D2, cfg.f, mask)
+        sel_f = selected.astype(jnp.float32)
+        beta = jnp.clip(theta - 2 * cfg.f, 1, theta)
+
+        def one_masked(g):
+            M = g.reshape(W, -1)
+            center = aggregators.masked_median(M, sel_f)
+            return aggregators.masked_mean_around(
+                M, center, beta, sel_f).reshape(g.shape[1:])
+
+        d = jax.tree.map(one_masked, tree)
+        return d, {"weights": sel_f / jnp.maximum(theta, 1)}
 
     raise KeyError(f"unknown aggregator {cfg.name!r}; have "
                    f"{sorted(GRAM_RULES | COORDWISE_RULES | {'bulyan'})}")
@@ -300,7 +344,8 @@ def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None):
 # ---------------------------------------------------------------------------
 
 def compressed_aggregate(tree, cfg: AggregatorConfig,
-                         comm: CommConfig = CommConfig(), ef=None):
+                         comm: CommConfig = CommConfig(), ef=None, *,
+                         mask=None):
     """Aggregate through a worker->server compression codec.
 
     Routing (see docs/compression.md for the dataflow diagrams):
@@ -328,6 +373,11 @@ def compressed_aggregate(tree, cfg: AggregatorConfig,
       comm: codec selection + hyper-parameters.
       ef: worker-major EF memory (``repro.comm.error_feedback.init_ef``)
         or ``None``.  Required iff ``comm.wants_ef``.
+      mask: optional (W,) active-worker membership (see
+        :mod:`repro.dist.membership`), forwarded to
+        :func:`aggregate_tree`.  Inactive workers ship no bits
+        (``comm_bits`` scales by the active fraction) and their EF memory
+        is frozen, not updated, until they rejoin.
     Returns:
       ``(d_tree, aux, new_ef)``; ``aux`` extends the aggregator aux with
       ``comm_bits`` (total bits shipped worker->server this step, from the
@@ -336,9 +386,14 @@ def compressed_aggregate(tree, cfg: AggregatorConfig,
     """
     codec = get_codec(comm)
     bits_dense = dense_bits(tree)
+    W = jax.tree.leaves(tree)[0].shape[0]
+    # active fraction: the per-step cost model is per-worker-uniform, so an
+    # absent worker's share simply doesn't travel.
+    frac = (jnp.asarray(1.0) if mask is None
+            else jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0) / W)
     if codec is None:
-        d, aux = aggregate_tree(tree, cfg)
-        return d, {**aux, "comm_bits": jnp.asarray(bits_dense),
+        d, aux = aggregate_tree(tree, cfg, mask=mask)
+        return d, {**aux, "comm_bits": jnp.asarray(bits_dense) * frac,
                    "comm_ratio": jnp.asarray(1.0)}, ef
     if comm.wants_ef and ef is None:
         raise ValueError(
@@ -347,16 +402,16 @@ def compressed_aggregate(tree, cfg: AggregatorConfig,
             "returned state (or set CommConfig(error_feedback=False))")
 
     bits = codec.bits(tree)
-    stats = {"comm_bits": jnp.asarray(bits),
+    stats = {"comm_bits": jnp.asarray(bits) * frac,
              "comm_ratio": jnp.asarray(bits_dense / bits)}
 
     if codec.gram_feed and cfg.name in GRAM_RULES and not comm.wants_ef:
         payload = codec.encode(tree)
         K = tree_gram(payload, gram_dtype=cfg.gram_dtype, impl=cfg.impl)
-        d, aux = aggregate_tree(tree, cfg, gram=K)
+        d, aux = aggregate_tree(tree, cfg, gram=K, mask=mask)
         return d, {**aux, **stats}, ef
 
     use_ef = ef if comm.wants_ef else None
-    decoded, _, new_ef = ef_encode_decode(codec, tree, use_ef)
-    d, aux = aggregate_tree(decoded, cfg)
+    decoded, _, new_ef = ef_encode_decode(codec, tree, use_ef, mask=mask)
+    d, aux = aggregate_tree(decoded, cfg, mask=mask)
     return d, {**aux, **stats}, (new_ef if comm.wants_ef else ef)

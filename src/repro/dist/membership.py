@@ -1,0 +1,210 @@
+"""Elastic worker membership: who is in the aggregation round, in-graph.
+
+The Byzantine threat models (:mod:`repro.core.attacks`) simulate workers
+that *lie*; this module simulates workers that *come and go* — crashes,
+leaves/rejoins, rolling churn, stragglers that miss the synchronization
+deadline.  Both families the paper's related work evaluates under
+(Alistarh et al. 2018; Konstantinidis et al. 2022) are then one registry
+lookup away from the train step.
+
+Design constraints, mirroring the attacks layer:
+
+* **Pure function of the step index.**  A :class:`FaultSchedule` is static
+  Python data (tuples of :class:`FaultEvent`); :func:`membership_at` maps a
+  *traced* ``step`` to the :class:`Membership` state with ordinary jnp ops.
+  The whole fault simulation therefore compiles into the train step once —
+  membership changes never alter an array shape and never retrigger
+  compilation (asserted via compile counting in
+  ``tests/test_membership.py``).
+* **Masking, not slicing.**  The worker axis keeps its static size W; the
+  active subset is a (W,) mask threaded into
+  :func:`repro.dist.aggregation.aggregate_tree` (masked Gram rows for the
+  FA/Krum family, masked leaves with dynamic order statistics for the
+  coordinate rules) and into the EF memory update (an absent worker's
+  error carry is frozen, not clobbered).
+
+Semantics: a worker covered by any event interval at ``step`` is *out of
+the round* — crashed, departed, or straggling past the sync deadline (an
+elastic synchronous system drops late arrivals; their staleness is
+telemetry).  ``staleness`` counts the consecutive steps (inclusive) the
+worker has been out; 0 while active.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["FaultEvent", "FaultSchedule", "Membership", "membership_at",
+           "active_mask", "FAULTS", "get_fault_schedule"]
+
+# "Forever" sentinel for crash events (any step beyond a real horizon).
+NEVER = 1 << 30
+
+KINDS = ("crash", "leave", "straggle")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One worker-outage interval: ``worker`` is out for ``[start, stop)``.
+
+    ``kind`` is telemetry ('crash' | 'leave' | 'straggle') — the membership
+    consequence is identical (out of the round); the elastic driver and the
+    churn benchmark report it.
+    """
+
+    kind: str
+    worker: int
+    start: int
+    stop: int = NEVER
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; have {KINDS}")
+        if not 0 <= self.start < self.stop:
+            raise ValueError(f"bad interval [{self.start}, {self.stop})")
+        if self.worker < 0:
+            raise ValueError(f"bad worker index {self.worker}")
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """A static, hashable set of outage intervals (default: no faults)."""
+
+    events: tuple[FaultEvent, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+
+    @property
+    def is_trivial(self) -> bool:
+        return not self.events
+
+    def max_worker(self) -> int:
+        return max((e.worker for e in self.events), default=-1)
+
+
+class Membership(NamedTuple):
+    """Round membership state (a pytree; leaves are (W,) arrays).
+
+    active: bool (W,) — in this aggregation round.
+    staleness: int32 (W,) — consecutive steps out of the round (0 if active).
+    """
+
+    active: jnp.ndarray
+    staleness: jnp.ndarray
+
+
+def _merged_intervals(schedule: FaultSchedule):
+    """Per-worker outage intervals with adjacent/overlapping events merged
+    (static Python, runs at trace time).
+
+    Merging keeps the staleness semantics honest: a worker out for
+    ``[0, 5)`` and ``[5, 10)`` has been gone 8 consecutive steps at step
+    7, not 3 — staleness counts from the merged interval's start.
+    """
+    per_worker: dict[int, list[list[int]]] = {}
+    for e in sorted(schedule.events, key=lambda e: (e.worker, e.start)):
+        ivs = per_worker.setdefault(e.worker, [])
+        stop = min(e.stop, NEVER)
+        if ivs and e.start <= ivs[-1][1]:
+            ivs[-1][1] = max(ivs[-1][1], stop)
+        else:
+            ivs.append([e.start, stop])
+    return [(w, s, t) for w, ivs in per_worker.items() for s, t in ivs]
+
+
+def membership_at(schedule: FaultSchedule, step, W: int) -> Membership:
+    """Membership state at a (possibly traced) ``step`` for W workers.
+
+    Pure jnp: the event table lowers to constants, so this traces once and
+    serves every step.  Workers named by no event are always active.
+    """
+    if schedule.max_worker() >= W:
+        raise ValueError(
+            f"fault schedule names worker {schedule.max_worker()} but the "
+            f"step only has W={W} workers")
+    step = jnp.asarray(step, jnp.int32)
+    if schedule.is_trivial:
+        return Membership(jnp.ones((W,), bool), jnp.zeros((W,), jnp.int32))
+    ev = _merged_intervals(schedule)
+    workers = jnp.asarray(np.array([w for w, _, _ in ev]), jnp.int32)
+    starts = jnp.asarray(np.array([s for _, s, _ in ev]), jnp.int32)
+    stops = jnp.asarray(np.array([t for _, _, t in ev]), jnp.int32)
+    down = (step >= starts) & (step < stops)                  # (E,)
+    down_w = jnp.zeros((W,), bool).at[workers].max(down)
+    stale_e = jnp.where(down, step - starts + 1, 0)
+    staleness = jnp.zeros((W,), jnp.int32).at[workers].max(stale_e)
+    return Membership(~down_w, jnp.where(down_w, staleness, 0))
+
+
+def active_mask(schedule: FaultSchedule, step, W: int) -> jnp.ndarray:
+    """Float (W,) active mask at ``step`` (the aggregation-layer currency)."""
+    return membership_at(schedule, step, W).active.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# scenario registry (mirrors repro.core.attacks.ATTACKS)
+# ---------------------------------------------------------------------------
+
+def _none(W: int) -> FaultSchedule:
+    return FaultSchedule()
+
+
+def _crash(W: int, *, n: int = 1, at: int = 10) -> FaultSchedule:
+    """The last ``n`` workers crash at step ``at`` and never return (the
+    last so crash and Byzantine sets don't overlap by default; capped at
+    W-1 — a schedule never empties the quorum)."""
+    n = min(n, W - 1)
+    return FaultSchedule(tuple(
+        FaultEvent("crash", W - 1 - i, at) for i in range(n)))
+
+
+def _rejoin(W: int, *, n: int = 1, at: int = 10,
+            down: int = 10) -> FaultSchedule:
+    """``n`` workers leave at ``at`` and rejoin ``down`` steps later."""
+    n = min(n, W - 1)
+    return FaultSchedule(tuple(
+        FaultEvent("leave", W - 1 - i, at, at + down) for i in range(n)))
+
+
+def _churn(W: int, *, period: int = 5, horizon: int = 200) -> FaultSchedule:
+    """Rolling membership: every ``period`` steps the next worker (round-
+    robin) drops out for one period — continuous joins *and* leaves."""
+    events = []
+    for r in range(max(horizon // period, 1)):
+        events.append(FaultEvent("leave", r % W,
+                                 r * period, (r + 1) * period))
+    return FaultSchedule(tuple(events))
+
+
+def _straggle(W: int, *, n: int = 1, every: int = 10,
+              duration: int = 3, horizon: int = 200) -> FaultSchedule:
+    """``n`` workers periodically miss ``duration`` sync deadlines."""
+    n = min(n, W - 1)
+    events = []
+    for start in range(every, max(horizon, every + 1), every):
+        for i in range(n):
+            events.append(FaultEvent("straggle", W - 1 - i, start,
+                                     start + min(duration, every)))
+    return FaultSchedule(tuple(events))
+
+
+FAULTS = {
+    "none": _none,
+    "crash": _crash,
+    "rejoin": _rejoin,
+    "churn": _churn,
+    "straggle": _straggle,
+}
+
+
+def get_fault_schedule(name: str, W: int, **kw) -> FaultSchedule:
+    """Build a named fault scenario for ``W`` workers."""
+    if name not in FAULTS:
+        raise KeyError(f"unknown fault scenario {name!r}; have "
+                       f"{sorted(FAULTS)}")
+    return FAULTS[name](W, **kw)

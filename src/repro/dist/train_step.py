@@ -20,6 +20,14 @@ pipeline jits (and pjits on a mesh) as a single program:
      (W, n) matrix is never materialized).
   4. **Update** — ``repro.optim`` transform + ``apply_updates``.
 
+With a non-trivial ``tc.faults`` schedule (:mod:`repro.dist.membership`)
+the step additionally computes the round's active-worker mask *in-graph*
+from the step index and threads it through the compression + aggregation
+stage: every rule operates on the dynamic worker subset (masked Gram rows
+/ masked leaves), absent workers ship no bits and keep their EF memory
+frozen, and membership changes never recompile (the mask is a traced
+value; all shapes stay (W, ...)).
+
 When the configured codec needs error feedback (``tc.comm.wants_ef``) the
 step carries the per-worker EF memory explicitly: its signature becomes
 ``step(params, opt_state, batch, rng, step_idx, ef)`` returning
@@ -49,6 +57,7 @@ import jax.numpy as jnp
 from repro.comm.compressors import CommConfig
 from repro.core import attacks
 from repro.dist.aggregation import AggregatorConfig, compressed_aggregate
+from repro.dist.membership import FaultSchedule, membership_at
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.optim import Optimizer, apply_updates
@@ -67,6 +76,7 @@ class TrainConfig:
     microbatch_splits: int = 1        # grad-accumulation splits per worker
     attn_impl: str = "xla"            # 'xla' (host / dry-run) | 'pallas' (TPU)
     comm: CommConfig = CommConfig()   # worker->server compression (repro.comm)
+    faults: FaultSchedule = FaultSchedule()  # worker churn (dist.membership)
 
 
 def init_train_state(key, cfg: ModelConfig, opt: Optimizer):
@@ -126,6 +136,12 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, opt: Optimizer,
         if k <= 1:
             (_, metrics), g = grad_fn(params, wb)
             return g, metrics
+        B = jax.tree.leaves(wb)[0].shape[0]
+        if B % k != 0:
+            raise ValueError(
+                f"microbatch_splits={k} must divide the per-worker batch "
+                f"size B={B} (grad accumulation splits the batch into k "
+                "equal sequential micro-batches)")
         mb = jax.tree.map(
             lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), wb)
         m_shapes = jax.eval_shape(
@@ -135,7 +151,8 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, opt: Optimizer,
         def accum(carry, b):
             acc_g, acc_m = carry
             (_, m), g = grad_fn(params, b)
-            return (jax.tree.map(jnp.add, acc_g, g),
+            return (jax.tree.map(lambda a, x: a + x.astype(jnp.float32),
+                                 acc_g, g),
                     jax.tree.map(jnp.add, acc_m, m)), None
 
         zeros = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
@@ -144,7 +161,11 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, opt: Optimizer,
                               m_shapes))
         (g, m), _ = jax.lax.scan(accum, zeros, mb)
         inv = 1.0 / k
-        return (jax.tree.map(lambda t: t * inv, g),
+        # Accumulation stays fp32; the *output* matches the k<=1 path's
+        # param-dtype gradients so the aggregator and comm_bits accounting
+        # see the same inputs regardless of k.
+        return (jax.tree.map(lambda t, p: (t * inv).astype(p.dtype),
+                             g, params),
                 jax.tree.map(lambda t: t * inv, m))
 
     def core(params, opt_state, batch, rng, step_idx, ef):
@@ -157,8 +178,17 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, opt: Optimizer,
             grads = attacks.apply_attack_tree(tc.attack, grads, rng,
                                               tc.attack_f)
 
+        W = jax.tree.leaves(grads)[0].shape[0]
+        if tc.faults.is_trivial:
+            mem, mask = None, None
+        else:
+            # Membership is a pure jnp function of the traced step index:
+            # the same compiled program serves every worker subset.
+            mem = membership_at(tc.faults, step_idx, W)
+            mask = mem.active.astype(jnp.float32)
+
         d, agg_aux, new_ef = compressed_aggregate(grads, tc.aggregator,
-                                                  tc.comm, ef)
+                                                  tc.comm, ef, mask=mask)
 
         lr = sched(step_idx)
         updates, new_opt_state = opt.update(d, opt_state, params, lr)
@@ -175,13 +205,25 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, opt: Optimizer,
         influence = jnp.abs(c) * worker_norms
         influence = influence / jnp.maximum(jnp.sum(influence), 1e-20)
 
-        metrics = {k: jnp.mean(v) for k, v in metrics_w.items()}
+        if mask is None:
+            metrics = {k: jnp.mean(v) for k, v in metrics_w.items()}
+        else:
+            # honest telemetry: absent workers' slots hold garbage — the
+            # per-worker metric means cover the active subset only.
+            wa = jnp.maximum(jnp.sum(mask), 1.0)
+            metrics = {
+                k: jnp.sum(v * mask.reshape((W,) + (1,) * (v.ndim - 1)))
+                / (wa * (v.size // W))
+                for k, v in metrics_w.items()}
         metrics["lr"] = lr
         metrics["grad_global_norm"] = global_norm(d)
         metrics["fa_weights"] = c
         metrics["worker_influence"] = influence
         metrics["comm_bits"] = agg_aux["comm_bits"]
         metrics["comm_ratio"] = agg_aux["comm_ratio"]
+        if mem is not None:
+            metrics["active_workers"] = jnp.sum(mem.active.astype(jnp.int32))
+            metrics["worker_staleness"] = mem.staleness
         return new_params, new_opt_state, metrics, new_ef
 
     if tc.comm.wants_ef:

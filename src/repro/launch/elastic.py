@@ -1,0 +1,317 @@
+"""Elastic fault-injection training driver: scheduled kills, crash-safe
+resume, verified bit-exact trajectories.
+
+The Byzantine harness answers "what if workers lie?"; this driver answers
+"what if the *system* fails?" — it runs multi-round training where the
+training process is killed at scheduled steps (taking all in-memory state
+with it, and leaving a deliberately *torn* checkpoint behind to exercise
+the crash-safe store), then restarts from the newest complete checkpoint,
+replays, and continues.  Worker churn (``--faults``, see
+:mod:`repro.dist.membership`) composes freely with the kills: membership
+is a pure function of the step index, so a resumed run sees the same
+worker subsets it would have seen uninterrupted.
+
+The contract the driver verifies (``--verify``) is the resume invariant:
+
+    loss trajectory of  (run -> kill -> resume)*  ==  uninterrupted run
+
+bit-exact (tolerance ``--tol``, default 1e-6, incl. error-feedback
+codecs — the EF memory is part of the checkpointed state).  This holds
+because every step is a pure function of ``(state, step_index)``: batches
+derive from the step index, per-step rng is ``PRNGKey(t)``, membership is
+scheduled, the LR schedule is built on the persisted total horizon, and
+the checkpoint round-trips fp32/bf16 state bitwise.
+
+    PYTHONPATH=src python -m repro.launch.elastic --verify \
+        --steps 12 --kill-at 5,9 --ckpt-every 3 --workers 6 \
+        --aggregator flag --attack sign_flip --byzantine 1 --codec signsgd
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import time
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (checkpoint_meta, latest_step, load_checkpoint,
+                              save_checkpoint)
+from repro.checkpoint.checkpoint import _commit_name, _state_name, _step_dir
+from repro.comm import CODECS, CommConfig, init_ef
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.flag import FlagConfig
+from repro.data.pipeline import WorkerDataConfig, lm_worker_batches
+from repro.data.synthetic import SyntheticLM
+from repro.dist.aggregation import AggregatorConfig
+from repro.dist.membership import FAULTS, get_fault_schedule
+from repro.dist.train_step import TrainConfig, build_train_step, init_train_state
+from repro.optim import adamw, warmup_cosine
+
+__all__ = ["ElasticConfig", "build_harness", "run_reference", "run_elastic",
+           "verify_elastic"]
+
+
+@dataclass
+class ElasticConfig:
+    """One elastic training scenario (reduced arch, CPU-sized defaults)."""
+
+    arch: str = "smollm-360m"
+    steps: int = 12                  # TOTAL horizon
+    workers: int = 6
+    per_worker_batch: int = 2
+    seq: int = 32
+    aggregator: str = "flag"
+    attack: str = "none"
+    byzantine: int = 0
+    codec: str = "none"
+    error_feedback: bool | None = None
+    faults: str = "none"
+    faults_kw: dict = field(default_factory=dict)
+    lam: float = 0.0                 # small-p default (EXPERIMENTS.md)
+    lr: float = 3e-3
+    ckpt_every: int = 3
+    seed: int = 0
+
+
+class Harness(NamedTuple):
+    """Built scenario: jitted step + everything needed to drive it."""
+
+    cfg: ElasticConfig
+    model_cfg: object
+    tc: TrainConfig
+    comm: CommConfig
+    opt: object
+    step_fn: object
+    task: object
+    wdc: WorkerDataConfig
+
+
+def build_harness(cfg: ElasticConfig) -> Harness:
+    """Build (and jit) the scenario's train step once; rounds reuse it."""
+    model_cfg = reduce_for_smoke(get_config(cfg.arch)).replace(
+        frontend=None, num_prefix_embeds=0)
+    comm = CommConfig(codec=cfg.codec, error_feedback=cfg.error_feedback)
+    tc = TrainConfig(
+        aggregator=AggregatorConfig(
+            name=cfg.aggregator, f=cfg.byzantine,
+            flag=FlagConfig(
+                lam=cfg.lam,
+                regularizer="pairwise" if cfg.lam else "none")),
+        attack=cfg.attack, attack_f=cfg.byzantine, comm=comm,
+        faults=get_fault_schedule(cfg.faults, cfg.workers, **cfg.faults_kw))
+    opt = adamw(weight_decay=0.0)
+    sched = warmup_cosine(cfg.lr, cfg.steps, warmup=min(5, cfg.steps // 2))
+    step_fn = jax.jit(build_train_step(model_cfg, tc, opt, sched))
+    task = SyntheticLM(vocab_size=model_cfg.vocab_size)
+    wdc = WorkerDataConfig(workers=cfg.workers,
+                           per_worker_batch=cfg.per_worker_batch)
+    return Harness(cfg, model_cfg, tc, comm, opt, step_fn, task, wdc)
+
+
+def _init_state(h: Harness):
+    params, opt_state = init_train_state(
+        jax.random.PRNGKey(h.cfg.seed), h.model_cfg, h.opt)
+    if h.comm.wants_ef:
+        return params, opt_state, init_ef(params, h.cfg.workers)
+    return params, opt_state
+
+
+def _one_step(h: Harness, state, t: int):
+    """Advance ``state`` by the (pure) step ``t``; returns (state, metrics)."""
+    batch = lm_worker_batches(h.task, h.wdc, t, h.cfg.seq)
+    rng = jax.random.PRNGKey(t)
+    ti = jnp.asarray(t, jnp.int32)
+    if h.comm.wants_ef:
+        params, opt_state, ef = state
+        params, opt_state, m, ef = h.step_fn(params, opt_state, batch, rng,
+                                             ti, ef)
+        return (params, opt_state, ef), m
+    params, opt_state = state
+    params, opt_state, m = h.step_fn(params, opt_state, batch, rng, ti)
+    return (params, opt_state), m
+
+
+def run_reference(h: Harness) -> dict[int, float]:
+    """The uninterrupted run: per-step losses for the full horizon."""
+    state = _init_state(h)
+    losses = {}
+    for t in range(h.cfg.steps):
+        state, m = _one_step(h, state, t)
+        losses[t] = float(m["loss"])
+    return losses
+
+
+def _write_torn_checkpoint(ckpt_dir: str, step: int, tree) -> None:
+    """Simulate a SIGKILL mid-save: a step dir with a half-written npz and
+    no commit marker.  ``latest_step`` must skip it (asserted by resume)."""
+    save_checkpoint(ckpt_dir, step, tree)
+    step_dir = _step_dir(ckpt_dir, step)
+    os.unlink(os.path.join(step_dir, _commit_name(0)))
+    state_path = os.path.join(step_dir, _state_name(0))
+    size = os.path.getsize(state_path)
+    with open(state_path, "rb+") as f:
+        f.truncate(max(size // 2, 1))
+
+
+def run_elastic(h: Harness, ckpt_dir: str,
+                kill_at: tuple[int, ...] = ()) -> dict:
+    """Multi-round kill-and-resume training.
+
+    Each kill at step k discards all in-memory state after executing step
+    k-1 (and leaves a torn checkpoint at k, exercising the crash-safe
+    store); the next round restores the newest *complete* checkpoint and
+    replays from there.  Every re-executed step must reproduce the loss of
+    its first execution exactly — the per-step replay mismatches are
+    returned for the caller to assert on.
+
+    Returns a dict: ``losses`` {step: loss} (first execution wins),
+    ``replayed`` (re-executed step count), ``replay_mismatch`` (max abs
+    loss diff across replays), ``rounds``, ``kills`` (the kill steps that
+    actually fired).
+    """
+    cfg = h.cfg
+    if os.path.isdir(ckpt_dir):
+        shutil.rmtree(ckpt_dir)
+    kills = sorted(k for k in set(kill_at) if 0 < k < cfg.steps)
+    extra = {"total_steps": cfg.steps}
+    losses: dict[int, float] = {}
+    replayed = 0
+    replay_mismatch = 0.0
+    rounds = 0
+    fired = []
+
+    while True:
+        rounds += 1
+        # --- (re)start: restore the newest complete checkpoint, or init.
+        last = latest_step(ckpt_dir)
+        if last is None:
+            state, step0 = _init_state(h), 0
+        else:
+            saved_total = checkpoint_meta(ckpt_dir)["extra"]["total_steps"]
+            assert saved_total == cfg.steps, (saved_total, cfg.steps)
+            state, step0 = load_checkpoint(ckpt_dir, _init_state(h))
+        kill = next((k for k in kills if k > step0), None)
+        stop = cfg.steps if kill is None else kill
+        for t in range(step0, stop):
+            state, m = _one_step(h, state, t)
+            loss = float(m["loss"])
+            if t in losses:
+                replayed += 1
+                replay_mismatch = max(replay_mismatch,
+                                      abs(loss - losses[t]))
+            else:
+                losses[t] = loss
+            if (t + 1) % cfg.ckpt_every == 0 and (t + 1) < stop:
+                save_checkpoint(ckpt_dir, t + 1, state, extra=extra)
+        if kill is None:
+            save_checkpoint(ckpt_dir, cfg.steps, state, extra=extra)
+            return {"losses": losses, "replayed": replayed,
+                    "replay_mismatch": replay_mismatch, "rounds": rounds,
+                    "kills": fired}
+        # --- the kill: in-memory state dies here; the torn dir left behind
+        # is what a real SIGKILL mid-save produces.
+        fired.append(kill)
+        kills = [k for k in kills if k != kill]
+        _write_torn_checkpoint(ckpt_dir, stop, state)
+        del state
+
+
+def verify_elastic(h: Harness, ckpt_dir: str, kill_at: tuple[int, ...],
+                   tol: float = 1e-6) -> dict:
+    """Run reference + elastic and compare trajectories.
+
+    Returns the elastic result dict extended with ``max_diff`` and ``ok``.
+    """
+    ref = run_reference(h)
+    out = run_elastic(h, ckpt_dir, kill_at)
+    diffs = [abs(out["losses"][t] - ref[t]) for t in range(h.cfg.steps)]
+    out["max_diff"] = max(diffs)
+    out["ok"] = (out["max_diff"] <= tol
+                 and out["replay_mismatch"] <= tol
+                 and len(out["losses"]) == h.cfg.steps)
+    return out
+
+
+def _parse_fault_args(pairs):
+    kw = {}
+    for p in pairs or ():
+        k, _, v = p.partition("=")
+        kw[k] = int(v)
+    return kw
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--workers", type=int, default=6)
+    ap.add_argument("--per-worker-batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--aggregator", default="flag")
+    ap.add_argument("--attack", default="none")
+    ap.add_argument("--byzantine", type=int, default=0)
+    ap.add_argument("--codec", default="none", choices=("none",) + CODECS)
+    ap.add_argument("--no-ef", action="store_true")
+    ap.add_argument("--faults", default="none", choices=sorted(FAULTS))
+    ap.add_argument("--fault-arg", action="append", metavar="K=V",
+                    help="fault scenario int kwarg, repeatable "
+                         "(e.g. --fault-arg at=4 --fault-arg n=2)")
+    ap.add_argument("--lam", type=float, default=0.0)
+    ap.add_argument("--ckpt-every", type=int, default=3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_elastic_ckpt")
+    ap.add_argument("--kill-at", default="5,9",
+                    help="comma-separated steps at which the process dies")
+    ap.add_argument("--verify", action="store_true",
+                    help="compare against the uninterrupted run; exit "
+                         "nonzero on trajectory mismatch")
+    ap.add_argument("--tol", type=float, default=1e-6)
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args(argv)
+
+    cfg = ElasticConfig(
+        arch=args.arch, steps=args.steps, workers=args.workers,
+        per_worker_batch=args.per_worker_batch, seq=args.seq,
+        aggregator=args.aggregator, attack=args.attack,
+        byzantine=args.byzantine, codec=args.codec,
+        error_feedback=False if args.no_ef else None,
+        faults=args.faults, faults_kw=_parse_fault_args(args.fault_arg),
+        lam=args.lam, ckpt_every=args.ckpt_every)
+    kill_at = tuple(int(k) for k in args.kill_at.split(",") if k)
+
+    print(f"elastic: arch={cfg.arch} W={cfg.workers} agg={cfg.aggregator} "
+          f"attack={cfg.attack}(f={cfg.byzantine}) codec={cfg.codec} "
+          f"faults={cfg.faults} steps={cfg.steps} kill_at={kill_at}")
+    t0 = time.time()
+    h = build_harness(cfg)
+    if args.verify:
+        out = verify_elastic(h, args.ckpt_dir, kill_at, tol=args.tol)
+        print(f"rounds={out['rounds']} kills={out['kills']} "
+              f"replayed={out['replayed']} steps "
+              f"(replay mismatch {out['replay_mismatch']:.2e}) "
+              f"max |loss diff| vs uninterrupted = {out['max_diff']:.2e} "
+              f"({time.time() - t0:.0f}s)")
+        print("VERIFY:", "OK" if out["ok"] else "FAILED")
+    else:
+        out = run_elastic(h, args.ckpt_dir, kill_at)
+        print(f"rounds={out['rounds']} kills={out['kills']} "
+              f"replayed={out['replayed']} final loss "
+              f"{out['losses'][cfg.steps - 1]:.4f} "
+              f"({time.time() - t0:.0f}s)")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({k: v for k, v in out.items() if k != "losses"}
+                      | {"losses": {str(t): l
+                                    for t, l in sorted(out["losses"].items())}},
+                      f, indent=1)
+    if args.verify and not out["ok"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,17 @@ path, one device.
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
         --debug --steps 100 --aggregator flag --attack random --byzantine 2
+
+``--steps`` is the *total* training horizon: a resumed run (``--ckpt-dir``
+pointing at existing checkpoints) completes the remaining steps on the
+original LR schedule — the horizon is persisted in the checkpoint meta, so
+the warmup/decay shape cannot silently re-warm on the leftover step count.
+With a compression codec that carries error feedback (``--codec signsgd``
+/ ``topk``) the EF memory is part of the checkpointed state, so a resumed
+compressed run keeps its error memory instead of restarting from zero.
+Worker churn is injected with ``--faults`` (see repro.dist.membership);
+the fault-injection *process-kill* scenarios live in
+``repro.launch.elastic``.
 """
 
 from __future__ import annotations
@@ -17,13 +28,15 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint import (checkpoint_meta, latest_step, load_checkpoint,
+                              save_checkpoint)
+from repro.comm import CODECS, CommConfig, init_ef
 from repro.configs import get_config, reduce_for_smoke
-from repro.configs.shapes import SHAPES
 from repro.core.flag import FlagConfig
 from repro.data.pipeline import WorkerDataConfig, lm_worker_batches
 from repro.data.synthetic import SyntheticLM
 from repro.dist.aggregation import AggregatorConfig
+from repro.dist.membership import FAULTS, get_fault_schedule
 from repro.dist.sharding import use_sharding
 from repro.dist.train_step import TrainConfig, build_train_step, init_train_state
 from repro.launch.mesh import make_production_mesh, worker_count
@@ -36,13 +49,19 @@ def main(argv=None):
     ap.add_argument("--debug", action="store_true",
                     help="reduced config on local devices (CPU)")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--steps", type=int, default=100,
+                    help="TOTAL training horizon (resume completes it)")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--per-worker-batch", type=int, default=4)
     ap.add_argument("--aggregator", default="flag")
     ap.add_argument("--attack", default="none")
     ap.add_argument("--byzantine", type=int, default=0)
+    ap.add_argument("--codec", default="none", choices=("none",) + CODECS)
+    ap.add_argument("--no-ef", action="store_true",
+                    help="disable error feedback for biased codecs")
+    ap.add_argument("--faults", default="none", choices=sorted(FAULTS),
+                    help="worker-churn scenario (repro.dist.membership)")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--lam", type=float, default=-1.0,
@@ -63,52 +82,96 @@ def main(argv=None):
         W = worker_count(mesh)
 
     lam = args.lam if args.lam >= 0 else (float(W) if W > 6 else 0.0)
+    comm = CommConfig(codec=args.codec,
+                      error_feedback=False if args.no_ef else None)
     tc = TrainConfig(
         aggregator=AggregatorConfig(
             name=args.aggregator, f=args.byzantine,
             flag=FlagConfig(lam=lam,
                             regularizer="pairwise" if lam else "none")),
-        attack=args.attack, attack_f=args.byzantine)
+        attack=args.attack, attack_f=args.byzantine, comm=comm,
+        faults=get_fault_schedule(args.faults, W))
     opt = adamw() if args.optimizer == "adamw" else sgd(momentum=0.9)
-    sched = warmup_cosine(args.lr, args.steps, warmup=min(20, args.steps // 5))
 
     params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    ef = init_ef(params, W) if comm.wants_ef else None
+
+    total = args.steps
     step0 = 0
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        (params, opt_state), step0 = load_checkpoint(
-            args.ckpt_dir, (params, opt_state))
+        # The LR horizon is a property of the *run*, not of this process
+        # invocation: schedules must be rebuilt on the persisted total, or
+        # a resumed run re-warms and re-decays on the leftover step count.
+        saved_total = checkpoint_meta(args.ckpt_dir)["extra"].get(
+            "total_steps")
+        if saved_total is not None and saved_total != total:
+            print(f"resume: using checkpointed horizon total_steps="
+                  f"{saved_total} (ignoring --steps {total})")
+            total = saved_total
+        template = ((params, opt_state, ef) if comm.wants_ef
+                    else (params, opt_state))
+        flat = jax.tree_util.tree_flatten_with_path(template)[0]
+        want = sorted(jax.tree_util.keystr(p) for p, _ in flat)
+        saved = checkpoint_meta(args.ckpt_dir)["keys"]
+        if saved != want:
+            raise SystemExit(
+                "resume state mismatch: the checkpoint holds "
+                f"{len(saved)} leaves but this invocation expects "
+                f"{len(want)} — most likely the --codec/--no-ef flags "
+                "differ from the run that wrote the checkpoint (the EF "
+                "memory is part of the checkpointed state); rerun with "
+                "the original flags or start a fresh --ckpt-dir")
+        state, step0 = load_checkpoint(args.ckpt_dir, template)
+        if comm.wants_ef:
+            params, opt_state, ef = state
+        else:
+            params, opt_state = state
         print(f"resumed from step {step0}")
+    extra = {"total_steps": total}
 
+    sched = warmup_cosine(args.lr, total, warmup=min(20, total // 5))
     step_fn = jax.jit(build_train_step(cfg, tc, opt, sched))
     task = SyntheticLM(vocab_size=cfg.vocab_size)
     wdc = WorkerDataConfig(workers=W, per_worker_batch=args.per_worker_batch)
 
+    def ckpt_tree():
+        return (params, opt_state, ef) if comm.wants_ef \
+            else (params, opt_state)
+
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M workers={W} "
           f"agg={args.aggregator}(lam={lam}) attack={args.attack} "
-          f"f={args.byzantine}")
+          f"f={args.byzantine} codec={args.codec} faults={args.faults} "
+          f"steps {step0}->{total}")
     t0 = time.time()
     ctx = use_sharding(mesh, {}) if mesh is not None else None
     if ctx:
         ctx.__enter__()
     try:
-        for t in range(step0, step0 + args.steps):
+        for t in range(step0, total):
             batch = lm_worker_batches(task, wdc, t, args.seq)
-            params, opt_state, m = step_fn(params, opt_state, batch,
-                                           jax.random.PRNGKey(t),
-                                           jnp.asarray(t, jnp.int32))
-            if t % args.log_every == 0 or t == step0 + args.steps - 1:
+            if comm.wants_ef:
+                params, opt_state, m, ef = step_fn(
+                    params, opt_state, batch, jax.random.PRNGKey(t),
+                    jnp.asarray(t, jnp.int32), ef)
+            else:
+                params, opt_state, m = step_fn(params, opt_state, batch,
+                                               jax.random.PRNGKey(t),
+                                               jnp.asarray(t, jnp.int32))
+            if t % args.log_every == 0 or t == total - 1:
+                act = (f" act {int(m['active_workers'])}/{W}"
+                       if "active_workers" in m else "")
                 print(f"step {t:5d} loss {float(m['loss']):.4f} "
                       f"lr {float(m['lr']):.2e} "
-                      f"|g| {float(m['grad_global_norm']):.3f} "
+                      f"|g| {float(m['grad_global_norm']):.3f}{act} "
                       f"({time.time() - t0:.0f}s)", flush=True)
             if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
-                save_checkpoint(args.ckpt_dir, t + 1, (params, opt_state))
+                save_checkpoint(args.ckpt_dir, t + 1, ckpt_tree(),
+                                extra=extra)
     finally:
         if ctx:
             ctx.__exit__(None, None, None)
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, step0 + args.steps,
-                        (params, opt_state))
+        save_checkpoint(args.ckpt_dir, total, ckpt_tree(), extra=extra)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,188 @@
+"""Crash-safe checkpoint layer (format v2) + resume-equivalence tests.
+
+Crash recovery: a save is only visible once its commit marker lands, so a
+SIGKILL at any point mid-save (simulated by truncating the npz / dropping
+meta / dropping the marker) leaves a step dir that ``latest_step`` skips
+and resume lands on the previous complete step.
+
+Resume equivalence (the elastic driver's contract): running 2N steps
+uninterrupted == running N steps, killing the process, restoring from the
+checkpoint and running the remaining N — bit-identical losses (<= 1e-6
+with error feedback), across the aggregator x attack x codec acceptance
+matrix.  Local rngs throughout (the shared session-scoped fixture makes
+statistical tolerances order-dependent).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import (checkpoint_meta, latest_step, load_checkpoint,
+                              save_checkpoint)
+from repro.checkpoint.checkpoint import _commit_name, _state_name, _step_dir
+from repro.launch.elastic import (ElasticConfig, build_harness,
+                                  verify_elastic)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(7,)), jnp.bfloat16),
+        "count": jnp.asarray(rng.integers(0, 100, (2,)), jnp.int32),
+    }
+
+
+class TestCheckpointV2:
+    def test_roundtrip_bitwise(self, tmp_path):
+        tree = _tree(0)
+        save_checkpoint(str(tmp_path), 5, tree, extra={"total_steps": 20})
+        out, step = load_checkpoint(str(tmp_path), jax.tree.map(
+            jnp.zeros_like, tree))
+        assert step == 5
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32) if a.dtype == jnp.bfloat16 else
+                np.asarray(a),
+                np.asarray(b, np.float32) if b.dtype == jnp.bfloat16 else
+                np.asarray(b))
+        assert checkpoint_meta(str(tmp_path))["extra"]["total_steps"] == 20
+
+    def test_save_is_atomic_layout(self, tmp_path):
+        d = save_checkpoint(str(tmp_path), 3, _tree())
+        names = sorted(os.listdir(d))
+        assert names == ["commit_0.json", "meta_0.json", "state_0.npz"]
+        assert not [n for n in names if n.endswith(".tmp")]
+        commit = json.load(open(os.path.join(d, "commit_0.json")))
+        assert commit["state_bytes"] == os.path.getsize(
+            os.path.join(d, "state_0.npz"))
+
+    @pytest.mark.parametrize("corruption",
+                             ["truncate_npz", "drop_meta", "drop_marker",
+                              "drop_npz"])
+    def test_latest_step_skips_torn_write(self, tmp_path, corruption):
+        """SIGKILL-simulation: whatever part of the newest save is missing
+        or torn, resume lands on the previous complete step."""
+        tree = _tree(0)
+        save_checkpoint(str(tmp_path), 2, tree)
+        save_checkpoint(str(tmp_path), 4, _tree(1))
+        d4 = _step_dir(str(tmp_path), 4)
+        if corruption == "truncate_npz":
+            p = os.path.join(d4, _state_name(0))
+            with open(p, "rb+") as f:
+                f.truncate(os.path.getsize(p) // 2)
+        elif corruption == "drop_meta":
+            os.unlink(os.path.join(d4, "meta_0.json"))
+        elif corruption == "drop_marker":
+            os.unlink(os.path.join(d4, _commit_name(0)))
+        else:
+            os.unlink(os.path.join(d4, _state_name(0)))
+        assert latest_step(str(tmp_path)) == 2
+        out, step = load_checkpoint(str(tmp_path), jax.tree.map(
+            jnp.zeros_like, tree))
+        assert step == 2
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+
+    def test_empty_and_all_torn(self, tmp_path):
+        assert latest_step(str(tmp_path)) is None
+        save_checkpoint(str(tmp_path), 1, _tree())
+        os.unlink(os.path.join(_step_dir(str(tmp_path), 1), _commit_name(0)))
+        assert latest_step(str(tmp_path)) is None
+        with pytest.raises(FileNotFoundError):
+            load_checkpoint(str(tmp_path), _tree())
+
+    def test_multi_process_meta_not_clobbered(self, tmp_path):
+        """Each process namespaces its state AND meta: key manifests stay
+        per-writer (v1 clobbered meta.json with whichever landed last)."""
+        t0 = {"only_p0": jnp.ones((2,))}
+        t1 = {"only_p1": jnp.zeros((3, 3))}
+        save_checkpoint(str(tmp_path), 7, t0, process_index=0)
+        save_checkpoint(str(tmp_path), 7, t1, process_index=1)
+        m0 = checkpoint_meta(str(tmp_path), process_index=0)
+        m1 = checkpoint_meta(str(tmp_path), process_index=1)
+        assert m0["keys"] != m1["keys"]
+        assert any("only_p0" in k for k in m0["keys"])
+        assert any("only_p1" in k for k in m1["keys"])
+        out0, _ = load_checkpoint(str(tmp_path), jax.tree.map(
+            jnp.zeros_like, t0), process_index=0)
+        out1, _ = load_checkpoint(str(tmp_path), jax.tree.map(
+            jnp.ones_like, t1), process_index=1)
+        np.testing.assert_array_equal(np.asarray(out0["only_p0"]),
+                                      np.ones((2,)))
+        np.testing.assert_array_equal(np.asarray(out1["only_p1"]),
+                                      np.zeros((3, 3)))
+        # completeness is per process too
+        os.unlink(os.path.join(_step_dir(str(tmp_path), 7),
+                               _commit_name(1)))
+        assert latest_step(str(tmp_path), process_index=0) == 7
+        assert latest_step(str(tmp_path), process_index=1) is None
+
+    def test_v1_layout_still_readable(self, tmp_path):
+        """Old checkpoints (shared meta.json, no marker) load unchanged."""
+        tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}
+        d = _step_dir(str(tmp_path), 9)
+        os.makedirs(d)
+        flat = jax.tree_util.tree_flatten_with_path(tree)
+        arrays = {jax.tree_util.keystr(p): np.asarray(l)
+                  for p, l in flat[0]}
+        with open(os.path.join(d, "state_0.npz"), "wb") as f:
+            np.savez(f, **arrays)
+        with open(os.path.join(d, "meta.json"), "w") as f:
+            json.dump({"step": 9, "treedef": str(flat[1]),
+                       "bf16": [], "keys": sorted(arrays)}, f)
+        assert latest_step(str(tmp_path)) == 9
+        out, step = load_checkpoint(str(tmp_path),
+                                    jax.tree.map(jnp.zeros_like, tree))
+        assert step == 9
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+
+
+# ---------------------------------------------------------------------------
+# resume equivalence: the acceptance matrix
+# ---------------------------------------------------------------------------
+
+N = 3  # kill-and-resume horizon: 2N total steps, killed mid-flight
+
+
+@pytest.mark.parametrize("codec", ["identity", "signsgd"])
+@pytest.mark.parametrize("attack", ["none", "sign_flip"])
+@pytest.mark.parametrize("agg", ["flag", "krum", "mean"])
+class TestKillAndResume:
+    """(N steps -> checkpoint -> kill -> resume -> N steps) == 2N steps,
+    bit-identical losses (<= 1e-6 with EF), for every combination of
+    {flag, krum, mean} x {none, sign_flip} x {identity, signSGD}."""
+
+    def test_trajectory_matches_uninterrupted(self, tmp_path, agg, attack,
+                                              codec):
+        cfg = ElasticConfig(
+            steps=2 * N, workers=6, per_worker_batch=2, seq=32,
+            aggregator=agg, attack=attack,
+            byzantine=1 if attack != "none" else 0,
+            codec=codec, ckpt_every=N)
+        h = build_harness(cfg)
+        out = verify_elastic(h, str(tmp_path / "ckpt"),
+                             kill_at=(N + 1,), tol=1e-6)
+        assert out["kills"] == [N + 1]
+        assert out["replayed"] >= 1              # the kill really replayed
+        assert out["ok"], (out["max_diff"], out["replay_mismatch"])
+
+
+def test_resume_uses_persisted_lr_horizon(tmp_path):
+    """The elastic driver stores total_steps in the checkpoint meta; a
+    mismatching resume horizon is a detectable bug, not a silent re-warm."""
+    cfg = ElasticConfig(steps=2 * N, workers=5, per_worker_batch=2, seq=32,
+                        aggregator="mean", ckpt_every=N)
+    h = build_harness(cfg)
+    from repro.launch.elastic import run_elastic
+    run_elastic(h, str(tmp_path / "c"), kill_at=())
+    meta = checkpoint_meta(str(tmp_path / "c"))
+    assert meta["extra"]["total_steps"] == 2 * N

@@ -70,6 +70,53 @@ class TestTreeVsFlatAggregators:
                                    np.asarray(d_flat), rtol=2e-3, atol=2e-3)
 
 
+class TestMicrobatchAccumulation:
+    """Gradient accumulation (microbatch_splits > 1) must be a drop-in for
+    the single-shot path: same output dtypes (the aggregator and comm_bits
+    accounting see identical inputs regardless of k) and a clear error for
+    indivisible batch sizes."""
+
+    def _setup(self, B=4):
+        local = np.random.default_rng(21)
+        cfg = reduce_for_smoke(get_config("smollm-360m")).replace(
+            frontend=None, num_prefix_embeds=0)
+        opt = sgd(momentum=0.9)
+        params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        batch = _smoke_batch(local, cfg, B=B)
+        return cfg, opt, params, opt_state, batch
+
+    def test_microbatch_matches_single_shot(self):
+        cfg, opt, params, opt_state, batch = self._setup(B=4)
+        outs = {}
+        for k in (1, 2):
+            tc = TrainConfig(aggregator=AggregatorConfig(name="mean"),
+                             microbatch_splits=k)
+            step = jax.jit(build_train_step(cfg, tc, opt, constant(1e-3)))
+            p, _, m = step(params, opt_state, batch, jax.random.PRNGKey(1),
+                           jnp.zeros((), jnp.int32))
+            outs[k] = (p, m)
+        for a, b in zip(jax.tree.leaves(outs[1][0]),
+                        jax.tree.leaves(outs[2][0])):
+            assert a.dtype == b.dtype
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(float(outs[1][1]["loss"]),
+                                   float(outs[2][1]["loss"]), rtol=1e-5)
+        assert float(outs[1][1]["comm_bits"]) == \
+            float(outs[2][1]["comm_bits"])
+
+    def test_indivisible_batch_raises_clearly(self):
+        cfg, opt, params, opt_state, batch = self._setup(B=4)
+        tc = TrainConfig(aggregator=AggregatorConfig(name="mean"),
+                         microbatch_splits=3)
+        step = build_train_step(cfg, tc, opt, constant(1e-3))
+        with pytest.raises(ValueError, match="microbatch_splits=3 must "
+                                             "divide"):
+            jax.jit(step)(params, opt_state, batch, jax.random.PRNGKey(1),
+                          jnp.zeros((), jnp.int32))
+
+
 def _smoke_batch(rng, cfg, W=4, B=2, S=32):
     S_tok = S - (cfg.num_prefix_embeds if cfg.frontend else 0)
     batch = {

@@ -1,0 +1,301 @@
+"""Membership layer: fault schedules, masked aggregation == subset
+aggregation for all 11 rules, in-graph churn without recompiles, EF
+freezing across membership changes.
+
+Local rngs throughout (the shared session-scoped fixture makes
+statistical tolerances order-dependent).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.comm import CommConfig, init_ef
+from repro.core import FlagConfig
+from repro.core.gram import fa_weights_from_gram, gram_matrix
+from repro.dist.aggregation import (AggregatorConfig, aggregate_tree,
+                                    compressed_aggregate)
+from repro.dist.membership import (FaultEvent, FaultSchedule,
+                                   get_fault_schedule, membership_at)
+from repro.dist.train_step import (TrainConfig, build_train_step,
+                                   init_train_state)
+from repro.configs import get_config, reduce_for_smoke
+from repro.optim import constant, sgd
+
+ALL_RULES = ["mean", "flag", "pca", "median", "trimmed_mean", "meamed",
+             "phocas", "krum", "multi_krum", "bulyan", "geomed"]
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+class TestFaultSchedules:
+    def test_trivial(self):
+        mem = membership_at(FaultSchedule(), 5, 4)
+        assert bool(jnp.all(mem.active))
+        assert bool(jnp.all(mem.staleness == 0))
+
+    def test_crash_is_permanent(self):
+        s = get_fault_schedule("crash", 6, n=2, at=4)
+        for t, expect_active in [(3, 6), (4, 4), (1000, 4)]:
+            mem = membership_at(s, t, 6)
+            assert int(jnp.sum(mem.active)) == expect_active
+        # the last n workers crash (disjoint from the first-f Byzantine set)
+        mem = membership_at(s, 10, 6)
+        assert not bool(mem.active[5]) and not bool(mem.active[4])
+        assert bool(mem.active[0])
+
+    def test_rejoin_interval_and_staleness(self):
+        s = get_fault_schedule("rejoin", 4, n=1, at=3, down=4)
+        assert bool(membership_at(s, 2, 4).active[3])
+        for t in range(3, 7):
+            mem = membership_at(s, t, 4)
+            assert not bool(mem.active[3])
+            assert int(mem.staleness[3]) == t - 3 + 1
+        mem = membership_at(s, 7, 4)
+        assert bool(mem.active[3]) and int(mem.staleness[3]) == 0
+
+    def test_churn_rotates(self):
+        s = get_fault_schedule("churn", 3, period=2, horizon=12)
+        outs = [int(jnp.argmin(membership_at(s, t, 3).active))
+                for t in (0, 2, 4, 6)]
+        assert outs == [0, 1, 2, 0]
+        assert all(int(jnp.sum(membership_at(s, t, 3).active)) == 2
+                   for t in range(8))
+
+    def test_straggle_periodic(self):
+        s = get_fault_schedule("straggle", 5, n=1, every=4, duration=2,
+                               horizon=20)
+        drops = [t for t in range(20)
+                 if not bool(membership_at(s, t, 5).active[4])]
+        assert drops == [4, 5, 8, 9, 12, 13, 16, 17]
+
+    def test_schedule_validation(self):
+        with pytest.raises(ValueError):
+            FaultEvent("crash", 0, 5, 3)
+        with pytest.raises(ValueError):
+            FaultEvent("explode", 0, 5)
+        with pytest.raises(ValueError):
+            membership_at(FaultSchedule((FaultEvent("crash", 9, 0),)), 0, 4)
+        with pytest.raises(KeyError):
+            get_fault_schedule("nope", 4)
+
+    def test_membership_is_jit_pure(self):
+        s = get_fault_schedule("churn", 4, period=3, horizon=30)
+        f = jax.jit(lambda t: membership_at(s, t, 4))
+        masks = {np.asarray(f(t).active).tobytes() for t in range(9)}
+        assert len(masks) > 1
+        assert f._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# masked aggregation == aggregation on the active subset
+# ---------------------------------------------------------------------------
+
+def _worker_tree(seed, W):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=(W, 8, 6)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.normal(size=(W, 30)), jnp.float32)}}
+    # give workers distinct scales so selection rules have real choices
+    tree = jax.tree.map(
+        lambda l: l * jnp.linspace(0.5, 2.0, W).reshape(
+            (W,) + (1,) * (l.ndim - 1)), tree)
+    return tree
+
+
+ACTIVE = np.array([1, 0, 1, 1, 0, 1, 1, 0, 1], bool)   # non-contiguous
+
+
+@pytest.mark.parametrize("name", ALL_RULES)
+class TestMaskedEqualsSubset:
+    def test_equivalence(self, name):
+        W = ACTIVE.size
+        tree = _worker_tree(3, W)
+        sub = jax.tree.map(lambda l: l[ACTIVE], tree)
+        mask = jnp.asarray(ACTIVE, jnp.float32)
+        # explicit m + tol=0: both runs execute the same IRLS iteration
+        # count, so the comparison is numerics-only (see gram.py)
+        cfg = AggregatorConfig(name=name, f=1,
+                               flag=FlagConfig(lam=2.0, m=3, tol=0.0))
+        d_m, aux_m = aggregate_tree(tree, cfg, mask=mask)
+        d_s, _ = aggregate_tree(sub, cfg)
+        for a, b in zip(jax.tree.leaves(d_m), jax.tree.leaves(d_s)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_inactive_weights_are_zero(self, name):
+        W = ACTIVE.size
+        tree = _worker_tree(4, W)
+        cfg = AggregatorConfig(name=name, f=1,
+                               flag=FlagConfig(lam=2.0, m=3))
+        _, aux = aggregate_tree(tree, cfg,
+                                mask=jnp.asarray(ACTIVE, jnp.float32))
+        w = np.asarray(aux["weights"])
+        assert np.all(w[~ACTIVE] == 0.0)
+        assert np.abs(w[ACTIVE]).sum() > 0
+
+    def test_inactive_values_cannot_leak(self, name):
+        """Poisoning an inactive worker's slot with huge garbage changes
+        nothing — the definition of being out of the round."""
+        W = ACTIVE.size
+        tree = _worker_tree(5, W)
+        mask = jnp.asarray(ACTIVE, jnp.float32)
+        cfg = AggregatorConfig(name=name, f=1,
+                               flag=FlagConfig(lam=2.0, m=3, tol=0.0))
+        d0, _ = aggregate_tree(tree, cfg, mask=mask)
+        idx = int(np.flatnonzero(~ACTIVE)[0])
+        poisoned = jax.tree.map(
+            lambda l: l.at[idx].set(1e6 * jnp.ones_like(l[idx])), tree)
+        d1, _ = aggregate_tree(poisoned, cfg, mask=mask)
+        for a, b in zip(jax.tree.leaves(d0), jax.tree.leaves(d1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_adjacent_events_merge_for_staleness():
+    """Two back-to-back outage intervals are one consecutive absence."""
+    s = FaultSchedule((FaultEvent("leave", 0, 0, 5),
+                       FaultEvent("leave", 0, 5, 10)))
+    mem = membership_at(s, 7, 2)
+    assert not bool(mem.active[0])
+    assert int(mem.staleness[0]) == 8         # out since step 0, inclusive
+    assert bool(membership_at(s, 10, 2).active[0])
+
+
+@pytest.mark.parametrize("name", ["krum", "multi_krum", "bulyan"])
+def test_degenerate_quorum_never_selects_inactive(name):
+    """With <= 1 active worker the selection rules must still put zero
+    weight on every inactive worker (a lone active worker has no peers to
+    score against; its +inf score must not hand the pick to a departed
+    worker's garbage slot)."""
+    W = 4
+    tree = _worker_tree(9, W)
+    cfg = AggregatorConfig(name=name, f=0)
+    for active in ([0, 0, 0, 1], [0, 0, 0, 0]):
+        mask = jnp.asarray(active, jnp.float32)
+        d, aux = aggregate_tree(tree, cfg, mask=mask)
+        w = np.asarray(aux["weights"])
+        assert np.all(w[~np.asarray(active, bool)] == 0.0), (name, active, w)
+        if sum(active) == 1 and name != "bulyan":
+            # the lone active worker IS the aggregate
+            lone = int(np.argmax(active))
+            for out, leaf in zip(jax.tree.leaves(d), jax.tree.leaves(tree)):
+                np.testing.assert_allclose(np.asarray(out),
+                                           np.asarray(leaf[lone]),
+                                           rtol=1e-5, atol=1e-6)
+
+
+def test_masked_fa_solver_agreement():
+    """rank_p and qspace oracles agree on masked problems too."""
+    rng = np.random.default_rng(7)
+    W = ACTIVE.size
+    G = jnp.asarray(rng.normal(size=(200, W)), jnp.float32)
+    K = gram_matrix(G)
+    mask = jnp.asarray(ACTIVE, jnp.float32)
+    cfg = FlagConfig(lam=2.0, m=3, tol=0.0)
+    c_r, _ = fa_weights_from_gram(K, cfg, solver="rank_p", mask=mask)
+    c_q, _ = fa_weights_from_gram(K, cfg, solver="qspace", mask=mask)
+    np.testing.assert_allclose(np.asarray(c_r), np.asarray(c_q),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# EF + comm under membership
+# ---------------------------------------------------------------------------
+
+class TestMembershipComm:
+    def test_ef_frozen_for_inactive(self):
+        W = ACTIVE.size
+        tree = _worker_tree(6, W)
+        params = jax.tree.map(lambda l: l[0], tree)
+        ef = jax.tree.map(lambda l: l + 1.0, init_ef(params, W))
+        comm = CommConfig(codec="signsgd")
+        mask = jnp.asarray(ACTIVE, jnp.float32)
+        _, _, new_ef = compressed_aggregate(
+            tree, AggregatorConfig(name="mean"), comm, ef, mask=mask)
+        for n, o in zip(jax.tree.leaves(new_ef), jax.tree.leaves(ef)):
+            np.testing.assert_array_equal(np.asarray(n[~ACTIVE]),
+                                          np.asarray(o[~ACTIVE]))
+            assert bool(jnp.any(n[ACTIVE] != o[ACTIVE]))
+
+    def test_comm_bits_scale_with_active_fraction(self):
+        W = ACTIVE.size
+        tree = _worker_tree(8, W)
+        cfg = AggregatorConfig(name="mean")
+        _, aux_full, _ = compressed_aggregate(tree, cfg)
+        _, aux_m, _ = compressed_aggregate(
+            tree, cfg, mask=jnp.asarray(ACTIVE, jnp.float32))
+        frac = ACTIVE.sum() / W
+        np.testing.assert_allclose(float(aux_m["comm_bits"]),
+                                   float(aux_full["comm_bits"]) * frac,
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: churn through the train step, one compile
+# ---------------------------------------------------------------------------
+
+class TestTrainStepChurn:
+    def test_churn_no_recompile_and_masked_weights(self):
+        cfg = reduce_for_smoke(get_config("smollm-360m")).replace(
+            frontend=None, num_prefix_embeds=0)
+        W = 6
+        sched = get_fault_schedule("churn", W, period=2, horizon=32)
+        tc = TrainConfig(
+            aggregator=AggregatorConfig(
+                name="flag", flag=FlagConfig(lam=0.0, regularizer="none")),
+            faults=sched)
+        opt = sgd(momentum=0.9)
+        params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        step_fn = jax.jit(build_train_step(cfg, tc, opt, constant(1e-3)))
+
+        rng = np.random.default_rng(11)
+        batch = {
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (W, 2, 16)), jnp.int32),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (W, 2, 16)), jnp.int32),
+        }
+        out_worker = []     # which worker the *step's own metrics* say is out
+        for t in range(6):
+            params, opt_state, m = step_fn(params, opt_state, batch,
+                                           jax.random.PRNGKey(t),
+                                           jnp.asarray(t, jnp.int32))
+            assert bool(jnp.isfinite(m["loss"]))
+            mem = membership_at(sched, t, W)
+            assert int(m["active_workers"]) == int(jnp.sum(mem.active))
+            assert int(m["active_workers"]) == W - 1
+            w = np.asarray(m["fa_weights"])
+            inactive = ~np.asarray(mem.active)
+            assert np.all(w[inactive] == 0.0)
+            np.testing.assert_array_equal(np.asarray(m["worker_staleness"]),
+                                          np.asarray(mem.staleness))
+            # the compiled step tracked the traced step index, not a baked
+            # step-0 mask: the out worker (stale, zero-weight) rotates
+            out_worker.append(int(np.argmax(
+                np.asarray(m["worker_staleness"]) > 0)))
+        assert len(set(out_worker)) > 1, out_worker
+        # ...and membership changed across the run on ONE compilation
+        assert step_fn._cache_size() == 1
+
+    def test_trivial_schedule_has_no_membership_metrics(self):
+        cfg = reduce_for_smoke(get_config("smollm-360m")).replace(
+            frontend=None, num_prefix_embeds=0)
+        opt = sgd(momentum=0.9)
+        params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        step_fn = jax.jit(build_train_step(cfg, TrainConfig(), opt,
+                                           constant(1e-3)))
+        rng = np.random.default_rng(12)
+        batch = {
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (4, 2, 16)), jnp.int32),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (4, 2, 16)), jnp.int32),
+        }
+        *_, m = step_fn(params, opt_state, batch, jax.random.PRNGKey(0),
+                        jnp.zeros((), jnp.int32))
+        assert "active_workers" not in m and "worker_staleness" not in m

@@ -1,0 +1,127 @@
+"""Sharded-aggregation benchmark: devices x n sweep of the mesh-native path.
+
+Times a full FA/mean aggregation (Gram + weights + combine) through
+``aggregate_tree(..., sharded=mesh)`` against the single-device path,
+sweeping devices in {1, 2, 4, 8} (forced host CPU devices) x n in
+{1e5, 1e6} coordinates.  Rows land in the shared ``BENCH_aggregator.json``
+under the ``sharded_agg`` section.
+
+On one physical CPU the forced 8-"device" mesh is an *emulation* — every
+shard still executes on the same silicon, so wall-clock measures the
+dataflow overhead (shard_map dispatch, the (W, W) psum), not the n/d
+speedup a real mesh delivers.  The structural win is asserted separately:
+``tests/test_sharded_agg.py`` checks the compiled per-device HLO never
+holds a full-width coordinate tensor, which is what makes the path scale
+on hardware where the devices are real.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python benchmarks/sharded_agg.py
+
+(The flag is set automatically when the script is the main module and no
+device-count flag is present.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+if __name__ == "__main__":
+    # Script mode only (importers keep their own device topology): must
+    # happen before the first jax import — the host platform reads
+    # XLA_FLAGS once at backend initialization.
+    if "xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip()
+
+if __package__ in (None, ""):
+    # `python benchmarks/sharded_agg.py` puts benchmarks/ itself on
+    # sys.path; the sibling imports below need the repo root.
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.flag import FlagConfig
+from repro.dist.aggregation import AggregatorConfig, aggregate_tree
+from repro.launch.mesh import make_host_mesh
+
+from benchmarks.bench_aggregator import (BENCH_JSON, calibration_us,
+                                         time_call, write_bench_json)
+
+
+def _worker_tree(rng, p: int, n: int, leaves: int = 6):
+    sizes = [n // leaves] * (leaves - 1)
+    sizes.append(n - sum(sizes))
+    return {f"leaf{i}": jnp.asarray(rng.normal(size=(p, s)), jnp.float32)
+            for i, s in enumerate(sizes)}
+
+
+def run(devices=(1, 2, 4, 8), ns=(100_000, 1_000_000), rules=("flag", "mean"),
+        *, p: int = 16, iters: int = 3, section: str = "sharded_agg",
+        path: Path | None = BENCH_JSON):
+    avail = len(jax.devices())
+    devices = [d for d in devices if d <= avail]
+    records = []
+    for n in ns:
+        rng = np.random.default_rng(n % 99991)
+        tree = jax.block_until_ready(_worker_tree(rng, p, n))
+        for rule in rules:
+            cfg = AggregatorConfig(
+                name=rule, flag=FlagConfig(lam=float(p), m=4, tol=0.0))
+            us_single = time_call(
+                jax.jit(lambda t, c=cfg: aggregate_tree(t, c)[0]), tree,
+                iters=iters)
+            for d in devices:
+                mesh = make_host_mesh(d)
+                us_sharded = time_call(
+                    jax.jit(lambda t, c=cfg, m=mesh: aggregate_tree(
+                        t, c, sharded=m)[0]), tree, iters=iters)
+                records.append({
+                    "devices": d, "n": n, "p": p, "rule": rule,
+                    "us_sharded": round(us_sharded, 1),
+                    "us_single": round(us_single, 1),
+                    "overhead_x": round(us_sharded / us_single, 3),
+                })
+                print(f"rule={rule} n={n} devices={d}: "
+                      f"sharded={us_sharded:.0f}us "
+                      f"single={us_single:.0f}us "
+                      f"({us_sharded / us_single:.2f}x)")
+    payload = {
+        "config": {"devices": list(devices), "ns": list(ns), "p": p,
+                   "rules": list(rules), "iters": iters,
+                   "backend": jax.default_backend(),
+                   "forced_host_devices": avail},
+        "calibration_us": round(calibration_us(), 1),
+        "records": records,
+        "note": ("forced host devices share one CPU: us_sharded measures "
+                 "shard_map + psum dataflow overhead, not a real-mesh "
+                 "speedup; per-device memory/HLO scaling is asserted in "
+                 "tests/test_sharded_agg.py"),
+    }
+    if path is not None:
+        write_bench_json(section, payload, path)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=str(BENCH_JSON))
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke config (n=16384 only, 2 iters)")
+    args = ap.parse_args(argv)
+    if args.tiny:
+        run(ns=(16_384,), iters=2, path=Path(args.out))
+        return 0
+    run(iters=args.iters, path=Path(args.out))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,19 +16,27 @@ the models):
                  ``compressed_aggregate`` wraps it with the ``repro.comm``
                  worker->server codecs (sketch payloads feed the Gram path);
                  both take a membership ``mask`` so every rule operates on a
-                 dynamic worker subset without recompiling
+                 dynamic worker subset without recompiling, and a
+                 ``sharded=`` mesh to run the whole thing mesh-native
+  sharded      — the mesh-sharded dataflow behind ``sharded=``: coordinate
+                 shards on every device, partial-Gram ``psum``, replicated
+                 p x p weight solve, shard-local combine — the full (W, n)
+                 stack never exists on any single device
   train_step   — vmapped per-worker grads -> attack injection -> compression
                  -> aggregation -> optimizer update, as one pure function
                  (EF memory threads through as an explicit carry; a
-                 ``TrainConfig.faults`` schedule masks the round in-graph)
+                 ``TrainConfig.faults`` schedule masks the round in-graph;
+                 ``TrainConfig.sharded_agg`` makes the gradient stack
+                 coordinate-sharded by construction)
   serve_step   — one-token greedy decode step + the batched decode loop
 """
 
 from repro.dist import sharding
 from repro.dist import membership
 from repro.dist import aggregation
+from repro.dist import sharded
 from repro.dist import train_step
 from repro.dist import serve_step
 
-__all__ = ["sharding", "membership", "aggregation", "train_step",
+__all__ = ["sharding", "membership", "aggregation", "sharded", "train_step",
            "serve_step"]

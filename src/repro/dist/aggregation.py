@@ -40,6 +40,12 @@ the full gradients.
 it routes a ``repro.comm`` codec around ``aggregate_tree`` — sketch codecs
 feed the Gram path directly (weights from compressed payloads, exact
 combine), everything else goes through EF-compensated encode/decode.
+
+Both entry points take ``sharded=`` to run mesh-native
+(:mod:`repro.dist.sharded`): coordinate shards spread over the devices,
+partial Grams meet in one ``(W, W)`` psum, the combine and the
+coordinate-wise rules stay shard-local — no device ever holds the full
+stack.  See docs/sharded_aggregation.md.
 """
 
 from __future__ import annotations
@@ -81,16 +87,27 @@ class AggregatorConfig:
     impl: str = "xla"
 
 
-def _leaf_matrix(leaf: jnp.ndarray, stride: int, dtype: str) -> jnp.ndarray:
-    """(W, ...) leaf -> (W, n_leaf) matrix for the Gram contraction."""
+def _leaf_matrix(leaf: jnp.ndarray, stride: int, dtype: str):
+    """(W, ...) leaf -> ((W, n_kept) matrix, fp32 Gram rescale).
+
+    Deterministic stride-subsample with the *exact* inverse kept fraction
+    as the rescale (``n / n_kept`` — unbiased diagonal even when the leaf
+    width is not a multiple of the stride).  The scale is returned
+    separately and applied to the fp32 Gram accumulator, never to the
+    matrix itself: folding it into a bf16 ``gram_dtype`` matrix would
+    truncate the scale to bf16 before the contraction.  Leaves narrower
+    than the stride keep every coordinate (scale 1, exact) instead of
+    keeping one sample and inflating it ``stride``-fold.
+    """
     M = leaf.reshape(leaf.shape[0], -1)
-    if stride > 1:
-        # Deterministic stride-subsample, scaled so E[diag] is preserved:
-        # K_sketch = stride * M_sub M_sub^T  approximates  M M^T.
-        M = M[:, ::stride] * jnp.sqrt(jnp.asarray(stride, jnp.float32))
+    scale = 1.0
+    if stride > 1 and M.shape[1] > stride:
+        n = M.shape[1]
+        M = M[:, ::stride]
+        scale = n / M.shape[1]
     if dtype != "float32":
         M = M.astype(jnp.dtype(dtype))
-    return M
+    return M, scale
 
 
 def tree_gram(tree, sketch_stride: int = 1, *, gram_dtype: str = "float32",
@@ -112,8 +129,10 @@ def tree_gram(tree, sketch_stride: int = 1, *, gram_dtype: str = "float32",
     Args:
       tree: worker-major pytree, every leaf shaped ``(W, ...)``.
       sketch_stride: fused path — keep every stride-th chunk of the packed
-        stack; looped path — keep every stride-th coordinate of each leaf,
-        scaled by ``sqrt(stride)``.  Both keep the diagonal unbiased.
+        stack; looped path — keep every stride-th coordinate of each leaf
+        (leaves narrower than the stride stay exact), with the exact
+        inverse kept fraction applied to the fp32 Gram.  Both keep the
+        diagonal unbiased.
       gram_dtype: dtype the gradient stack is cast to *before* the matmul
         (accumulation stays fp32).
       impl: kernel backend — ``'xla'`` | ``'pallas'`` | ``'pallas_interpret'``.
@@ -130,9 +149,10 @@ def tree_gram(tree, sketch_stride: int = 1, *, gram_dtype: str = "float32",
     W = leaves[0].shape[0]
     K = jnp.zeros((W, W), jnp.float32)
     for leaf in leaves:
-        M = _leaf_matrix(leaf, sketch_stride, gram_dtype)
-        # kernels.gram computes G^T G for column-major (n, p) input in fp32.
-        K = K + gram_kernel(M.T, impl=impl)
+        M, scale = _leaf_matrix(leaf, sketch_stride, gram_dtype)
+        # kernels.gram computes G^T G for column-major (n, p) input in fp32;
+        # the sketch rescale is applied to the fp32 result (post-cast).
+        K = K + gram_kernel(M.T, impl=impl) * scale
     return K
 
 
@@ -179,16 +199,29 @@ def _geomed_weights(K: jnp.ndarray, n_iter: int = 8, eps: float = 1e-8,
     ||g_i - z||^2 = K_ii - 2 (K w)_i + w^T K w.  Iterates identically to
     ``aggregators.geometric_median`` (init w = 1/p == init z = mean).
     With ``mask`` the weight support stays on active workers — every
-    iterate is then the Weiszfeld step of the active submatrix."""
+    iterate is then the Weiszfeld step of the active submatrix.
+
+    Degenerate memberships are exact by construction, not by luck: with a
+    single active worker ``r`` has one nonzero entry, so the normalized
+    iterate is that worker's exact one-hot (``r_i / r_i == 1.0`` in IEEE,
+    independent of the ``eps`` distance clip); with zero active workers
+    ``r`` is all-zero and the ``where`` keeps the previous (all-zero)
+    iterate instead of dividing by the ``1e-30`` clamp — no NaN/Inf
+    either way, even at ``eps = 0`` (regression-tested in
+    ``tests/test_membership.py``)."""
     p = K.shape[0]
+    eps = max(eps, 1e-30)                 # rsqrt(clip(., 0)) would be inf
     m = jnp.ones((p,), K.dtype) if mask is None else mask.astype(K.dtype)
     w0 = m / jnp.maximum(jnp.sum(m), 1.0)
 
     def body(w, _):
         Kw = K @ w
-        d2 = jnp.clip(jnp.diag(K) - 2.0 * Kw + w @ Kw, eps)
-        r = jax.lax.rsqrt(d2) * m
-        return r / jnp.maximum(jnp.sum(r), 1e-30), None
+        d2 = jnp.diag(K) - 2.0 * Kw + w @ Kw
+        r = jax.lax.rsqrt(jnp.clip(d2, eps)) * m
+        s = jnp.sum(r)
+        # s == 0 iff no active worker carries reweighting mass: w is
+        # already the (all-zero) answer — keep it.
+        return jnp.where(s > 0.0, r / jnp.maximum(s, 1e-30), w), None
 
     w, _ = jax.lax.scan(body, w0, None, length=n_iter)
     return w
@@ -240,7 +273,8 @@ GRAM_RULES = frozenset({"flag", "pca", "mean", "geomed", "krum",
 COORDWISE_RULES = frozenset({"median", "trimmed_mean", "meamed", "phocas"})
 
 
-def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None):
+def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None,
+                   sharded=None):
     """Aggregate a worker-major gradient pytree.
 
     Args:
@@ -259,6 +293,16 @@ def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None):
         FA/Krum family, masked leaves with dynamic order statistics for
         the coordinate rules.  Shapes are unchanged, so membership changes
         never recompile; inactive workers get combine weight exactly 0.
+      sharded: mesh-shard the aggregation (:mod:`repro.dist.sharded`):
+        the coordinate axis of every leaf spreads over the mesh devices,
+        each device computes the partial Gram of its shard, the ``(W, W)``
+        Gram meets in one ``psum``, weights run replicated, and the
+        combine / coordinate rules stay shard-local — the full ``(W, n)``
+        stack never exists on any device.  Pass a ``jax.sharding.Mesh``,
+        or ``True`` to use the active :func:`repro.dist.sharding.
+        use_sharding` mesh.  Composes with ``gram=`` (the override skips
+        the psum stage) and ``mask=``.  ``None``/``False`` keeps the
+        single-device path.
     Returns:
       ``(d_tree, aux)`` — ``d_tree`` has the worker axis reduced away (same
       treedef, leaf shapes ``(...)``); ``aux['weights']`` always holds a
@@ -275,6 +319,22 @@ def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None):
                          "cannot consume a precomputed Gram matrix")
     if mask is not None:
         mask = jnp.asarray(mask).astype(jnp.float32)
+
+    if sharded:                       # Mesh instances are always truthy
+        from jax.sharding import Mesh
+        from repro.dist.sharded import sharded_aggregate_tree
+        if isinstance(sharded, Mesh):
+            mesh = sharded
+        else:
+            from repro.dist.sharding import current_mesh
+            mesh = current_mesh()
+            if mesh is None:
+                raise ValueError(
+                    "aggregate_tree(sharded=True) needs an active mesh: "
+                    "wrap the call in repro.dist.sharding.use_sharding(...)"
+                    " or pass sharded=<jax.sharding.Mesh>")
+        return sharded_aggregate_tree(tree, cfg, mesh=mesh, gram=gram,
+                                      mask=mask)
 
     if cfg.name in GRAM_RULES:
         K = gram if gram is not None else tree_gram(
@@ -345,7 +405,7 @@ def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None):
 
 def compressed_aggregate(tree, cfg: AggregatorConfig,
                          comm: CommConfig = CommConfig(), ef=None, *,
-                         mask=None):
+                         mask=None, sharded=None):
     """Aggregate through a worker->server compression codec.
 
     Routing (see docs/compression.md for the dataflow diagrams):
@@ -378,6 +438,12 @@ def compressed_aggregate(tree, cfg: AggregatorConfig,
         :func:`aggregate_tree`.  Inactive workers ship no bits
         (``comm_bits`` scales by the active fraction) and their EF memory
         is frozen, not updated, until they rejoin.
+      sharded: forwarded to :func:`aggregate_tree` — mesh-shard the
+        gradient coordinate axis (see :mod:`repro.dist.sharded`).  The
+        sketch-Gram of a gram-feeding codec stays unsharded (payload
+        leaves are ``(W, k)`` with k tiny by construction); everything
+        n-sized — the decode, the dense Gram, the combine — runs
+        shard-local.
     Returns:
       ``(d_tree, aux, new_ef)``; ``aux`` extends the aggregator aux with
       ``comm_bits`` (total bits shipped worker->server this step, from the
@@ -392,7 +458,7 @@ def compressed_aggregate(tree, cfg: AggregatorConfig,
     frac = (jnp.asarray(1.0) if mask is None
             else jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0) / W)
     if codec is None:
-        d, aux = aggregate_tree(tree, cfg, mask=mask)
+        d, aux = aggregate_tree(tree, cfg, mask=mask, sharded=sharded)
         return d, {**aux, "comm_bits": jnp.asarray(bits_dense) * frac,
                    "comm_ratio": jnp.asarray(1.0)}, ef
     if comm.wants_ef and ef is None:
@@ -408,10 +474,11 @@ def compressed_aggregate(tree, cfg: AggregatorConfig,
     if codec.gram_feed and cfg.name in GRAM_RULES and not comm.wants_ef:
         payload = codec.encode(tree)
         K = tree_gram(payload, gram_dtype=cfg.gram_dtype, impl=cfg.impl)
-        d, aux = aggregate_tree(tree, cfg, gram=K, mask=mask)
+        d, aux = aggregate_tree(tree, cfg, gram=K, mask=mask,
+                                sharded=sharded)
         return d, {**aux, **stats}, ef
 
     use_ef = ef if comm.wants_ef else None
     decoded, _, new_ef = ef_encode_decode(codec, tree, use_ef, mask=mask)
-    d, aux = aggregate_tree(decoded, cfg, mask=mask)
+    d, aux = aggregate_tree(decoded, cfg, mask=mask, sharded=sharded)
     return d, {**aux, **stats}, (new_ef if comm.wants_ef else ef)

@@ -76,7 +76,9 @@ def decode_loop(params, cfg: ModelConfig, prompts, *, num_steps: int,
     Args:
       params: model parameters.
       cfg: model config.
-      prompts: ``(B, S)`` int32 prompt tokens.
+      prompts: ``(B, S)`` int32 prompt tokens, ``S >= 1`` (the last prompt
+        token's logits seed generation, so an empty prompt has nothing to
+        condition on — prepend a BOS token to generate unconditionally).
       num_steps: number of tokens to generate.
       max_len: static cache length; requires ``S + num_steps <= max_len``.
       cache_dtype: KV/recurrent cache dtype.
@@ -84,19 +86,28 @@ def decode_loop(params, cfg: ModelConfig, prompts, *, num_steps: int,
       ``(B, num_steps)`` int32 greedily generated tokens.
     """
     B, S = prompts.shape
+    if S == 0:
+        raise ValueError(
+            "decode_loop needs a non-empty prompt (S >= 1): generation is "
+            "seeded by the last prompt token's logits.  To generate "
+            "unconditionally, pass a (B, 1) BOS-token prompt instead")
+    if num_steps < 1:
+        raise ValueError(f"decode_loop needs num_steps >= 1, got "
+                         f"{num_steps}")
     if S + num_steps > max_len:
         raise ValueError(f"prompt ({S}) + generation ({num_steps}) exceeds "
                          f"max_len={max_len}")
     caches = transformer.init_caches(cfg, B, max_len, cache_dtype)
     step_fn = jax.jit(build_serve_step(cfg, max_len=max_len))
 
-    tok = prompts[:, :1]
     for t in range(S):
         tok, caches = step_fn(params, caches, prompts[:, t:t + 1],
                               jnp.asarray(t, jnp.int32))
-    out = []
-    for t in range(S, S + num_steps):
-        out.append(tok)
+    # the prompt loop's last step already produced generated token 0, so
+    # only num_steps - 1 further forwards are needed.
+    out = [tok]
+    for t in range(S, S + num_steps - 1):
         tok, caches = step_fn(params, caches, tok,
                               jnp.asarray(t, jnp.int32))
+        out.append(tok)
     return jnp.concatenate(out, axis=1)

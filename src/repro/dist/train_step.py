@@ -17,7 +17,12 @@ pipeline jits (and pjits on a mesh) as a single program:
      ``repro.comm`` codec compresses each worker's message (sketch codecs
      feed FA's Gram path directly; biased codecs run through error
      feedback), then the rule aggregates.  FA runs in Gram space (the flat
-     (W, n) matrix is never materialized).
+     (W, n) matrix is never materialized).  With ``sharded_agg`` the
+     gradient stack is constrained into coordinate shards straight off the
+     backward pass (``repro.dist.sharding.shard_grad_stack`` — no
+     device-0 hop) and aggregation runs mesh-native
+     (:mod:`repro.dist.sharded`): partial-Gram psum, replicated weight
+     solve, shard-local combine.
   4. **Update** — ``repro.optim`` transform + ``apply_updates``.
 
 With a non-trivial ``tc.faults`` schedule (:mod:`repro.dist.membership`)
@@ -58,6 +63,7 @@ from repro.comm.compressors import CommConfig
 from repro.core import attacks
 from repro.dist.aggregation import AggregatorConfig, compressed_aggregate
 from repro.dist.membership import FaultSchedule, membership_at
+from repro.dist.sharding import shard_grad_stack
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.optim import Optimizer, apply_updates
@@ -77,6 +83,10 @@ class TrainConfig:
     attn_impl: str = "xla"            # 'xla' (host / dry-run) | 'pallas' (TPU)
     comm: CommConfig = CommConfig()   # worker->server compression (repro.comm)
     faults: FaultSchedule = FaultSchedule()  # worker churn (dist.membership)
+    sharded_agg: bool = False         # mesh-sharded aggregation (dist.sharded):
+                                      # worker grads go coordinate-sharded by
+                                      # construction — partial-Gram psum, no
+                                      # device-0 hop, no full (W, n) stack
 
 
 def init_train_state(key, cfg: ModelConfig, opt: Optimizer):
@@ -187,8 +197,16 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, opt: Optimizer,
             mem = membership_at(tc.faults, step_idx, W)
             mask = mem.active.astype(jnp.float32)
 
-        d, agg_aux, new_ef = compressed_aggregate(grads, tc.aggregator,
-                                                  tc.comm, ef, mask=mask)
+        if tc.sharded_agg:
+            # Sharded by construction: GSPMD redistributes the per-worker
+            # gradients straight into the coordinate-shard layout the
+            # sharded aggregation consumes — the (W, n) stack never
+            # gathers onto one device on its way to the aggregator.
+            grads = shard_grad_stack(grads)
+
+        d, agg_aux, new_ef = compressed_aggregate(
+            grads, tc.aggregator, tc.comm, ef, mask=mask,
+            sharded=tc.sharded_agg or None)
 
         lr = sched(step_idx)
         updates, new_opt_state = opt.update(d, opt_state, params, lr)

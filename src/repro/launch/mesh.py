@@ -23,11 +23,37 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def _model_factor(n: int) -> int:
+    """Widest model axis (of 4/2/1) that divides ``n`` with data > 1."""
+    return next((m for m in (4, 2) if n % m == 0 and n > m), 1)
+
+
 def make_debug_mesh(n_devices: int | None = None):
     """Tiny (data, model) mesh over whatever devices exist (CPU tests)."""
-    n = n_devices or len(jax.devices())
-    model = next((m for m in (4, 2) if n % m == 0 and n > m), 1)
-    return jax.make_mesh((n // model, model), ("data", "model"))
+    return make_host_mesh(n_devices)
+
+
+def make_host_mesh(n_devices: int | None = None):
+    """(data, model) mesh over the FIRST ``n_devices`` host devices.
+
+    The sharded-aggregation tests and ``benchmarks/sharded_agg.py`` sweep
+    device counts on a single host
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), which needs
+    meshes over a *prefix* of the device list — ``jax.make_mesh`` insists
+    on consuming every device, so this builds the Mesh explicitly.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if n > len(devs):
+        raise ValueError(f"make_host_mesh: asked for {n} devices but only "
+                         f"{len(devs)} exist (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count={n})")
+    model = _model_factor(n)
+    return Mesh(np.asarray(devs[:n]).reshape(n // model, model),
+                ("data", "model"))
 
 
 def worker_count(mesh) -> int:

@@ -39,7 +39,8 @@ from repro.dist.aggregation import AggregatorConfig
 from repro.dist.membership import FAULTS, get_fault_schedule
 from repro.dist.sharding import use_sharding
 from repro.dist.train_step import TrainConfig, build_train_step, init_train_state
-from repro.launch.mesh import make_production_mesh, worker_count
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               worker_count)
 from repro.optim import adamw, sgd, warmup_cosine
 
 
@@ -62,6 +63,11 @@ def main(argv=None):
                     help="disable error feedback for biased codecs")
     ap.add_argument("--faults", default="none", choices=sorted(FAULTS),
                     help="worker-churn scenario (repro.dist.membership)")
+    ap.add_argument("--sharded-agg", action="store_true",
+                    help="mesh-sharded aggregation (repro.dist.sharded): "
+                         "coordinate shards per device, partial-Gram psum, "
+                         "no full (W, n) stack on any device; in --debug "
+                         "this activates a mesh over the local devices")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--lam", type=float, default=-1.0,
@@ -74,7 +80,9 @@ def main(argv=None):
     if args.debug:
         cfg = reduce_for_smoke(get_config(args.arch)).replace(
             frontend=None, num_prefix_embeds=0)
-        mesh = None
+        # sharded aggregation needs a mesh even in debug: span the local
+        # devices (1 on plain CPU; 8 under the forced-host-device flag).
+        mesh = make_host_mesh() if args.sharded_agg else None
         W = args.workers
     else:
         cfg = get_config(args.arch)
@@ -90,7 +98,8 @@ def main(argv=None):
             flag=FlagConfig(lam=lam,
                             regularizer="pairwise" if lam else "none")),
         attack=args.attack, attack_f=args.byzantine, comm=comm,
-        faults=get_fault_schedule(args.faults, W))
+        faults=get_fault_schedule(args.faults, W),
+        sharded_agg=args.sharded_agg)
     opt = adamw() if args.optimizer == "adamw" else sgd(momentum=0.9)
 
     params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
@@ -141,7 +150,7 @@ def main(argv=None):
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M workers={W} "
           f"agg={args.aggregator}(lam={lam}) attack={args.attack} "
           f"f={args.byzantine} codec={args.codec} faults={args.faults} "
-          f"steps {step0}->{total}")
+          f"sharded_agg={args.sharded_agg} steps {step0}->{total}")
     t0 = time.time()
     ctx = use_sharding(mesh, {}) if mesh is not None else None
     if ctx:

@@ -263,6 +263,58 @@ class TestFusedTreeGram:
                                    rtol=1e-5, atol=1e-4)
 
 
+class TestLoopedSketchPath:
+    """The ``fused=False`` per-leaf sketch path: the inverse-fraction
+    rescale is applied to the fp32 Gram accumulator (never folded into a
+    possibly-bf16 leaf matrix), and leaves narrower than the stride stay
+    exact instead of inflating one surviving sample stride-fold."""
+
+    def test_narrow_leaves_are_exact(self):
+        """Every leaf narrower than the stride -> sketch is a no-op."""
+        rng = np.random.default_rng(71)
+        tree = {f"l{i}": jnp.asarray(rng.normal(size=(5, w)), jnp.float32)
+                for i, w in enumerate([1, 2, 3, 7])}
+        flat = jnp.concatenate([x for x in jax.tree.leaves(tree)], axis=1)
+        K = tree_gram(tree, sketch_stride=8, fused=False)
+        np.testing.assert_allclose(np.asarray(K), np.asarray(flat @ flat.T),
+                                   rtol=1e-6, atol=1e-5)
+
+    def test_ragged_leaves_looped_agrees_with_fused(self):
+        """Ragged widths (sub-stride singletons next to wide leaves):
+        looped and fused sample different deterministic subsets, but both
+        must stay unbiased estimates of the same Gram — and of each
+        other.  Under the old stride-based rescale the width-1/3 leaves
+        were inflated stride-fold and the bias showed up here."""
+        rng = np.random.default_rng(72)
+        tree = {"a": jnp.asarray(rng.normal(size=(6, 1)), jnp.float32),
+                "b": jnp.asarray(rng.normal(size=(6, 3)), jnp.float32),
+                "c": jnp.asarray(rng.normal(size=(6, 20_000)), jnp.float32),
+                "d": jnp.asarray(rng.normal(size=(6, 9_777)), jnp.float32)}
+        K_full = np.asarray(tree_gram(tree))
+        K_loop = np.asarray(tree_gram(tree, sketch_stride=4, fused=False))
+        K_fuse = np.asarray(tree_gram(tree, sketch_stride=4))
+        for K in (K_loop, K_fuse):
+            ratio = np.diag(K) / np.diag(K_full)
+            assert (ratio > 0.85).all() and (ratio < 1.18).all()
+        scale = np.linalg.norm(K_full)
+        assert np.linalg.norm(K_loop - K_fuse) / scale < 0.1
+        assert np.linalg.norm(K_loop - K_full) / scale < 0.1
+
+    def test_bf16_cast_does_not_truncate_rescale(self):
+        """Integer-valued leaves are bf16-exact and the Gram accumulates
+        in fp32, so the ONLY way the bf16 sketch can diverge from the
+        fp32 sketch is a rescale folded into the matrix before the cast
+        (the old ``sqrt(stride)`` bug).  Post-cast rescale -> bitwise
+        equal."""
+        rng = np.random.default_rng(73)
+        vals = rng.integers(-8, 8, size=(4, 4096)).astype(np.float32)
+        tree = {"x": jnp.asarray(vals)}
+        K16 = tree_gram(tree, sketch_stride=3, gram_dtype="bfloat16",
+                        fused=False)
+        K32 = tree_gram(tree, sketch_stride=3, fused=False)
+        np.testing.assert_array_equal(np.asarray(K16), np.asarray(K32))
+
+
 class TestTreeCombinePrecision:
     def test_bf16_weights_not_truncated(self):
         """Combine weights must enter the contraction in fp32: offsets far

@@ -189,6 +189,56 @@ def test_degenerate_quorum_never_selects_inactive(name):
                                            rtol=1e-5, atol=1e-6)
 
 
+class TestGeomedDegenerateMembership:
+    """Weiszfeld with <= 1 active worker must be exact and finite by
+    construction — not via the eps distance clip or the 1e-30 sum clamp
+    (see _geomed_weights)."""
+
+    def _gram(self, W=5, seed=31):
+        rng = np.random.default_rng(seed)
+        G = jnp.asarray(rng.normal(size=(60, W)), jnp.float32)
+        return gram_matrix(G)
+
+    @pytest.mark.parametrize("eps", [1e-8, 0.0])
+    def test_single_active_exact_one_hot_under_jit(self, eps):
+        from repro.dist.aggregation import _geomed_weights
+        K = self._gram()
+        fn = jax.jit(lambda k, m: _geomed_weights(k, eps=eps, mask=m))
+        for idx in range(K.shape[0]):
+            mask = jnp.zeros((K.shape[0],), jnp.float32).at[idx].set(1.0)
+            w = np.asarray(fn(K, mask))
+            assert np.all(np.isfinite(w)), (idx, eps, w)
+            want = np.zeros(K.shape[0], np.float32)
+            want[idx] = 1.0
+            np.testing.assert_array_equal(w, want)
+
+    def test_zero_active_is_zero_not_nan(self):
+        from repro.dist.aggregation import _geomed_weights
+        K = self._gram(seed=32)
+        w = np.asarray(jax.jit(
+            lambda k, m: _geomed_weights(k, mask=m))(
+                K, jnp.zeros((K.shape[0],), jnp.float32)))
+        assert np.all(np.isfinite(w))
+        np.testing.assert_array_equal(w, np.zeros_like(w))
+
+    def test_aggregate_tree_geomed_single_active(self):
+        """Through the full jit'd aggregation path: the lone active
+        worker IS the aggregate, bitwise, and its weight is exactly 1."""
+        W = 4
+        tree = _worker_tree(33, W)
+        mask = jnp.zeros((W,), jnp.float32).at[2].set(1.0)
+        step = jax.jit(lambda t, m: aggregate_tree(
+            t, AggregatorConfig(name="geomed"), mask=m))
+        d, aux = step(tree, mask)
+        w = np.asarray(aux["weights"])
+        want = np.zeros(W, np.float32)
+        want[2] = 1.0
+        np.testing.assert_array_equal(w, want)
+        for out, leaf in zip(jax.tree.leaves(d), jax.tree.leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.asarray(leaf[2]))
+
+
 def test_masked_fa_solver_agreement():
     """rank_p and qspace oracles agree on masked problems too."""
     rng = np.random.default_rng(7)

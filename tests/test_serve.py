@@ -1,0 +1,141 @@
+"""Serve-layer tests: prefill/decode agreement through the serving API,
+decode_loop golden tokens, and input validation.
+
+``tests/test_models.py`` asserts decode==prefill at the *model* layer
+(``transformer.decode_step``); this module covers the serving layer that
+sits on top (``repro.dist.serve_step``): the jit-able serve step, the
+lockstep decode loop, and the prompt handling around them — which had no
+dedicated test module before.
+
+One representative arch per block family: pure attention (smollm),
+rgLRU+sliding-window attention (recurrentgemma), mLSTM/sLSTM (xlstm),
+windowed MoE attention (mixtral).
+
+Local rngs throughout (the shared session rng makes tolerances
+order-dependent).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.dist.serve_step import (build_prefill_step, build_serve_step,
+                                   decode_loop)
+from repro.models import transformer
+
+# one arch per block family (attn / rglru / xlstm / moe+window)
+FAMILY_ARCHS = ["smollm-360m", "recurrentgemma-9b", "xlstm-1.3b",
+                "mixtral-8x7b"]
+
+
+def _setup(arch, seed=0, B=2, S=7):
+    cfg = reduce_for_smoke(get_config(arch)).replace(frontend=None,
+                                                     num_prefix_embeds=0)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    # seed sequence, not hash(): str hashing is PYTHONHASHSEED-salted and
+    # would make the prompts (and any tolerance failure) unreproducible
+    rng = np.random.default_rng([seed, *arch.encode()])
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    return cfg, params, prompts
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+class TestPrefillDecodeAgreement:
+    def test_last_position_logits_match(self, arch):
+        """Consuming the prompt through the serve-step cache layout (the
+        exact layout decode_loop builds: max_len > S, fp32 caches) must
+        reproduce build_prefill_step's last-position logits."""
+        cfg, params, prompts = _setup(arch)
+        B, S = prompts.shape
+        max_len = S + 5
+        prefill = build_prefill_step(cfg)
+        logits_par = prefill(params, {"tokens": prompts})
+
+        caches = transformer.init_caches(cfg, B, max_len, jnp.float32)
+        lg = None
+        for t in range(S):
+            lg, caches = transformer.decode_step(
+                params, prompts[:, t:t + 1], caches,
+                jnp.asarray(t, jnp.int32), cfg, max_len=max_len)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(logits_par[:, -1]),
+                                   rtol=2e-2, atol=2e-2, err_msg=arch)
+
+    def test_first_generated_token_is_prefill_argmax(self, arch):
+        """decode_loop's first token == greedy argmax of the prefill
+        logits at the last prompt position (the seeding contract)."""
+        cfg, params, prompts = _setup(arch, seed=1)
+        out = decode_loop(params, cfg, prompts, num_steps=1,
+                          max_len=prompts.shape[1] + 2)
+        logits = build_prefill_step(cfg)(params, {"tokens": prompts})
+        want = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(out[:, 0]),
+                                      np.asarray(want), err_msg=arch)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "xlstm-1.3b"])
+def test_decode_loop_golden_token_chain(arch):
+    """Golden-token test: the whole greedy generation must equal the
+    chain produced by repeatedly re-prefilling the growing sequence and
+    taking the last-position argmax — an independent (cache-free)
+    implementation of greedy decoding."""
+    cfg, params, prompts = _setup(arch, seed=2, B=2, S=4)
+    num_steps = 4
+    out = decode_loop(params, cfg, prompts, num_steps=num_steps,
+                      max_len=prompts.shape[1] + num_steps + 1)
+    assert out.shape == (2, num_steps) and out.dtype == jnp.int32
+
+    prefill = build_prefill_step(cfg)
+    seq = prompts
+    golden = []
+    for _ in range(num_steps):
+        logits = prefill(params, {"tokens": seq})
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        golden.append(nxt)
+        seq = jnp.concatenate([seq, nxt], axis=1)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.concatenate(golden, axis=1)),
+                                  err_msg=arch)
+
+
+class TestServeStep:
+    def test_shapes_and_dtype(self):
+        cfg, params, prompts = _setup("smollm-360m", seed=3)
+        B = prompts.shape[0]
+        step = jax.jit(build_serve_step(cfg, max_len=8))
+        caches = transformer.init_caches(cfg, B, 8, jnp.float32)
+        nxt, caches = step(params, caches, prompts[:, :1],
+                           jnp.zeros((), jnp.int32))
+        assert nxt.shape == (B, 1) and nxt.dtype == jnp.int32
+        assert 0 <= int(jnp.min(nxt)) and int(jnp.max(nxt)) < cfg.vocab_size
+
+
+class TestDecodeLoopValidation:
+    def test_empty_prompt_rejected(self):
+        cfg, params, _ = _setup("smollm-360m", seed=4)
+        empty = jnp.zeros((2, 0), jnp.int32)
+        with pytest.raises(ValueError, match="non-empty prompt"):
+            decode_loop(params, cfg, empty, num_steps=3, max_len=8)
+
+    def test_zero_generation_rejected(self):
+        cfg, params, prompts = _setup("smollm-360m", seed=7)
+        with pytest.raises(ValueError, match="num_steps >= 1"):
+            decode_loop(params, cfg, prompts, num_steps=0, max_len=16)
+
+    def test_overlong_generation_rejected(self):
+        cfg, params, prompts = _setup("smollm-360m", seed=5)
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            decode_loop(params, cfg, prompts, num_steps=8,
+                        max_len=prompts.shape[1] + 2)
+
+    def test_single_token_prompt_works(self):
+        """S=1 is the minimal legal prompt (the BOS-seeding pattern the
+        S==0 error message recommends)."""
+        cfg, params, prompts = _setup("smollm-360m", seed=6)
+        out = decode_loop(params, cfg, prompts[:, :1], num_steps=2,
+                          max_len=4)
+        assert out.shape == (2, 2)

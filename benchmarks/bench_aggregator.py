@@ -18,10 +18,17 @@ and the crossover worker count; ``tiny`` holds the CI perf-smoke baseline
 (see ``--tiny`` / ``--check-baseline`` below and the ``perf-smoke`` lane
 in ``.github/workflows/ci.yml``).
 
+The ``rules`` section (``--rules``, or part of the default full run)
+times every aggregation rule end-to-end through ``aggregate_tree`` at
+impl in {xla, pallas} — the trajectory that tracks the coordinate-rule
+selection-network kernel (``kernels/coord_stats``, docs/coord_stats.md);
+``rules_tiny`` is its CI-scale twin and the second perf-smoke sub-gate.
+
 Wall-clock numbers are machine-dependent, so the CI gate normalizes by a
 fixed-size numpy matmul calibration stored alongside the baseline: a run
-fails only if the rank-p tiny wall-clock regresses >2x after scaling by
-the calibration ratio (slow runner != regression; slow solver == regression).
+fails only if the rank-p tiny wall-clock (or a pallas-impl coordinate
+rule) regresses >2x after scaling by the calibration ratio (slow runner
+!= regression; slow solver == regression).
 """
 
 from __future__ import annotations
@@ -209,12 +216,85 @@ def run_tiny(path: Path | None = BENCH_JSON):
     return run(ps=(4, 8), ns=(4096,), iters=2, section="tiny", path=path)
 
 
-def check_baseline(baseline_path: Path, *, factor: float = 2.0) -> int:
-    """Gate: fresh tiny rank-p wall-clock vs the committed baseline.
+# Per-rule wallclock: every aggregation rule through aggregate_tree, both
+# impls.  The coordinate rules + Bulyan are the rows this trajectory
+# tracks — the selection-network kernel (kernels/coord_stats) must keep
+# them within ~2x of `mean` (ROADMAP target), vs the 20-100x gap of the
+# jnp.sort references.
+ALL_RULES = ("mean", "median", "trimmed_mean", "meamed", "phocas", "krum",
+             "multi_krum", "bulyan", "pca", "geomed", "flag")
+# rules whose n-sized stage the coord_stats kernel runs; the perf gate
+# covers exactly these (the gram rules are gated by the rank-p solver
+# sub-gate already).
+COORD_GATED_RULES = ("median", "trimmed_mean", "meamed", "phocas", "bulyan")
 
-    Scales the committed numbers by the machine-speed calibration ratio,
-    then fails (returns 1) if any fresh rank-p tiny total exceeds
-    ``factor`` x the scaled baseline.
+
+def run_rules(p: int = 15, n: int = 100_000, *, f: int = 3, iters: int = 3,
+              impls=("xla", "pallas"), section: str = "rules",
+              path: Path | None = BENCH_JSON):
+    """Wall-clock per (rule x impl) through ``aggregate_tree``.
+
+    ``impl='pallas'`` is the production dispatch: on TPU it compiles the
+    Pallas kernels; on a CPU host every stage falls back to its best XLA
+    lowering (the fused selection network for the coordinate rules /
+    Bulyan stage, the jnp references for the Gram stages) — never the
+    interpreter, so the rows measure the real host path either way.
+    """
+    from repro.dist.aggregation import AggregatorConfig, aggregate_tree
+    rng = np.random.default_rng(7)
+    tree = jax.block_until_ready(_worker_tree(rng, p, n))
+    records = []
+    us_mean = {}
+    for impl in impls:
+        for name in ALL_RULES:
+            cfg = AggregatorConfig(name=name, f=f, impl=impl)
+            fn = jax.jit(lambda t, cfg=cfg: aggregate_tree(t, cfg)[0])
+            us = time_call(fn, tree, iters=iters)
+            if name == "mean":
+                us_mean[impl] = us
+            records.append({"rule": name, "impl": impl, "p": p, "n": n,
+                            "us": round(us, 1),
+                            "x_mean": round(us / max(us_mean[impl], 1e-9),
+                                            2)})
+            print(f"rule={name:13s} impl={impl:7s} {us:10.0f}us "
+                  f"({records[-1]['x_mean']:.1f}x mean)")
+    summary = {
+        "coord_rule_x_mean": {
+            impl: {r["rule"]: r["x_mean"] for r in records
+                   if r["impl"] == impl and r["rule"] in COORD_GATED_RULES}
+            for impl in impls},
+        "note": ("x_mean = wallclock / the same impl's `mean` rule; the "
+                 "selection network keeps the coordinate rules within ~2x "
+                 "of mean where the jnp.sort refs sat 20-100x off "
+                 "(XLA:CPU sorts with a scalar comparator)"),
+    }
+    payload = {"config": {"p": p, "n": n, "f": f, "iters": iters,
+                          "impls": list(impls),
+                          "backend": jax.default_backend()},
+               "calibration_us": round(calibration_us(), 1),
+               "records": records, "summary": summary}
+    if path is not None:
+        write_bench_json(section, payload, path)
+    return payload
+
+
+def run_rules_tiny(path: Path | None = BENCH_JSON):
+    """CI perf-smoke config for the per-rule rows (seconds-scale)."""
+    return run_rules(p=8, n=4096, f=1, iters=2, section="rules_tiny",
+                     path=path)
+
+
+def check_baseline(baseline_path: Path, *, factor: float = 2.0) -> int:
+    """Gate: fresh tiny wall-clock vs the committed baseline.
+
+    Two sub-gates, same machinery (committed numbers scaled by the
+    machine-speed calibration ratio, fail on >``factor``x):
+
+    * **rank-p solver** — the fresh ``tiny`` rank-p ``us_solver`` per
+      (p, n) config vs the committed ``tiny`` section.
+    * **coordinate rules** — the fresh ``rules_tiny`` pallas-impl
+      wall-clock for the COORD_GATED_RULES vs the committed
+      ``rules_tiny`` section (the selection-network path).
     """
     doc = json.loads(Path(baseline_path).read_text())
     base = doc.get("tiny")
@@ -244,21 +324,53 @@ def check_baseline(baseline_path: Path, *, factor: float = 2.0) -> int:
               f"total {fr['us_total']:.0f}us)")
         if fr["us_solver"] > budget:
             failures.append(fr)
+
+    base_rules = doc.get("rules_tiny")
+    if not base_rules:
+        print(f"no 'rules_tiny' baseline in {baseline_path}; the "
+              "coordinate-rule gate has nothing to compare against",
+              file=sys.stderr)
+        return 1
+    fresh_rules = run_rules_tiny(path=None)
+    rscale = (fresh_rules["calibration_us"]
+              / max(base_rules["calibration_us"], 1e-9))
+    for fr in fresh_rules["records"]:
+        if fr["impl"] != "pallas" or fr["rule"] not in COORD_GATED_RULES:
+            continue
+        br = next((r for r in base_rules["records"]
+                   if (r["rule"], r["impl"]) == (fr["rule"], fr["impl"])),
+                  None)
+        if br is None:
+            continue
+        budget = factor * br["us"] * rscale
+        status = "OK " if fr["us"] <= budget else "FAIL"
+        print(f"{status} {fr['rule']} (pallas) p={fr['p']} n={fr['n']}: "
+              f"{fr['us']:.0f}us vs budget {budget:.0f}us "
+              f"(baseline {br['us']:.0f}us, calib x{rscale:.2f})")
+        if fr["us"] > budget:
+            failures.append(fr)
+
     if failures:
-        print(f"perf-smoke: {len(failures)} rank-p tiny config(s) regressed "
+        print(f"perf-smoke: {len(failures)} tiny config(s) regressed "
               f">{factor}x vs committed baseline", file=sys.stderr)
         return 1
-    print("perf-smoke: rank-p tiny wall-clock within budget")
+    print("perf-smoke: rank-p solver + coordinate-rule tiny wall-clock "
+          "within budget")
     return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke config (p in {4,8}, n=4096)")
+                    help="CI smoke config (p in {4,8}, n=4096; also emits "
+                         "the rules_tiny per-rule section)")
+    ap.add_argument("--rules", action="store_true",
+                    help="per-rule wallclock only (all 11 rules x "
+                         "{xla, pallas} at p=15, n=1e5)")
     ap.add_argument("--check-baseline", metavar="JSON",
                     help="compare a fresh tiny run against the committed "
-                         "baseline numbers; exit 1 on >2x regression")
+                         "baseline numbers; exit 1 on >2x regression "
+                         "(rank-p solver + pallas coordinate rules)")
     ap.add_argument("--out", default=str(BENCH_JSON),
                     help="BENCH json path (default: repo root)")
     ap.add_argument("--iters", type=int, default=3)
@@ -267,8 +379,13 @@ def main(argv=None) -> int:
         return check_baseline(Path(args.check_baseline))
     if args.tiny:
         run_tiny(Path(args.out))
+        run_rules_tiny(Path(args.out))
+        return 0
+    if args.rules:
+        run_rules(iters=args.iters, path=Path(args.out))
         return 0
     run(iters=args.iters, path=Path(args.out))
+    run_rules(iters=args.iters, path=Path(args.out))
     return 0
 
 

@@ -24,6 +24,16 @@ import jax.numpy as jnp
 
 from repro.core.flag import FlagConfig, default_m
 from repro.core.gram import fa_weights_from_gram, gram_matrix
+# Single source for the coordinate-wise statistics: the kernel oracles in
+# kernels/coord_stats/ref.py (pure jnp, no Pallas import) ARE the
+# implementations here — see that module's docstring.
+from repro.kernels.coord_stats.ref import (
+    mean_around_ref,
+    meamed_ref,
+    median_ref,
+    phocas_ref,
+    trimmed_mean_ref,
+)
 
 __all__ = [
     "mean", "median", "trimmed_mean", "meamed", "phocas", "krum",
@@ -47,15 +57,12 @@ def mean(Gw: jnp.ndarray, **_) -> jnp.ndarray:
 
 def median(Gw: jnp.ndarray, **_) -> jnp.ndarray:
     """Coordinate-wise median [Yin et al. 2018]."""
-    return jnp.median(Gw, axis=0)
+    return median_ref(Gw)
 
 
 def trimmed_mean(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
     """Coordinate-wise trimmed mean: drop f largest + f smallest per coord."""
-    p = Gw.shape[0]
-    k = min(f, (p - 1) // 2)
-    s = jnp.sort(Gw, axis=0)
-    return jnp.mean(s[k:p - k], axis=0) if k > 0 else jnp.mean(s, axis=0)
+    return trimmed_mean_ref(Gw, f)
 
 
 def mean_around(Gw: jnp.ndarray, center: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -65,23 +72,17 @@ def mean_around(Gw: jnp.ndarray, center: jnp.ndarray, k: int) -> jnp.ndarray:
     applies this per leaf — coordinate-wise rules commute with the pytree
     split, so leafwise == flat exactly.
     """
-    d = jnp.abs(Gw - center[None, :])
-    # top-k smallest distances per coordinate via sort of (distance, value)
-    order = jnp.argsort(d, axis=0)
-    gathered = jnp.take_along_axis(Gw, order[:k], axis=0)
-    return jnp.mean(gathered, axis=0)
+    return mean_around_ref(Gw, center, k)
 
 
 def meamed(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
     """Mean-around-median [Xie et al. 2018]: mean of p-f closest to median."""
-    p = Gw.shape[0]
-    return mean_around(Gw, jnp.median(Gw, axis=0), max(p - f, 1))
+    return meamed_ref(Gw, f)
 
 
 def phocas(Gw: jnp.ndarray, *, f: int = 1, **_) -> jnp.ndarray:
     """Phocas [Xie et al. 2018]: mean of p-f closest to the trimmed mean."""
-    p = Gw.shape[0]
-    return mean_around(Gw, trimmed_mean(Gw, f=f), max(p - f, 1))
+    return phocas_ref(Gw, f)
 
 
 # ---------------------------------------------------------------------------

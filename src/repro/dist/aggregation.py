@@ -60,6 +60,9 @@ from repro.comm.error_feedback import ef_encode_decode
 from repro.core import aggregators
 from repro.core.flag import FlagConfig
 from repro.core.gram import fa_weights_from_gram
+from repro.kernels.coord_stats.ops import bulyan_select as bulyan_select_op
+from repro.kernels.coord_stats.ops import coord_stat
+from repro.kernels.coord_stats.ops import krum_scores as krum_scores_op
 from repro.kernels.gram.ops import gram as gram_kernel
 from repro.kernels.gram.ops import tree_gram_fused
 from repro.kernels.weighted_sum.ops import weighted_sum as weighted_sum_kernel
@@ -227,11 +230,12 @@ def _geomed_weights(K: jnp.ndarray, n_iter: int = 8, eps: float = 1e-8,
     return w
 
 
-def _selection_weights(K: jnp.ndarray, name: str, f: int) -> jnp.ndarray:
+def _selection_weights(K: jnp.ndarray, name: str, f: int,
+                       impl: str = "xla") -> jnp.ndarray:
     """Krum-family combination weights from the Gram matrix."""
     p = K.shape[0]
     D2 = aggregators.sq_dists_from_gram(K)
-    s = aggregators.krum_scores(D2, f)
+    s = krum_scores_op(D2, f=f, impl=impl)
     if name == "krum":
         return jax.nn.one_hot(jnp.argmin(s), p, dtype=K.dtype)
     q = max(p - f - 2, 1)
@@ -262,7 +266,7 @@ def _gram_weights(K: jnp.ndarray, cfg: AggregatorConfig,
         return _geomed_weights(K, mask=mask), {}
     if cfg.name in ("krum", "multi_krum"):
         if mask is None:
-            return _selection_weights(K, cfg.name, cfg.f), {}
+            return _selection_weights(K, cfg.name, cfg.f, cfg.impl), {}
         return aggregators.masked_selection_weights(
             aggregators.sq_dists_from_gram(K), cfg.name, cfg.f, mask), {}
     raise KeyError(cfg.name)
@@ -347,17 +351,16 @@ def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None,
     if cfg.name in COORDWISE_RULES:
         # Coordinate-wise rules commute with the pytree split: leafwise
         # application == the flat reference on the concatenated matrix.
-        if mask is None:
-            fn = aggregators.get_aggregator(cfg.name)
-            d = jax.tree.map(
-                lambda g: fn(g.reshape(W, -1), f=cfg.f).reshape(g.shape[1:]),
-                tree)
-            return d, {"weights": jnp.full((W,), 1.0 / W, jnp.float32)}
-        mfn = aggregators.MASKED_COORDWISE[cfg.name]
+        # coord_stat routes cfg.impl — the streaming Pallas selection
+        # network or the jnp references — with identical (masked)
+        # semantics either way.
         d = jax.tree.map(
-            lambda g: mfn(g.reshape(W, -1), mask, f=cfg.f
-                          ).reshape(g.shape[1:]),
+            lambda g: coord_stat(g.reshape(W, -1), op=cfg.name, f=cfg.f,
+                                 impl=cfg.impl, mask=mask
+                                 ).reshape(g.shape[1:]),
             tree)
+        if mask is None:
+            return d, {"weights": jnp.full((W,), 1.0 / W, jnp.float32)}
         wa = jnp.maximum(jnp.sum(mask), 1.0)
         return d, {"weights": mask / wa}
 
@@ -369,14 +372,15 @@ def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None,
             impl=cfg.impl)
         D2 = aggregators.sq_dists_from_gram(K)
         if mask is None:
-            picks = aggregators.bulyan_select(D2, cfg.f)
+            picks = bulyan_select_op(D2, f=cfg.f, impl=cfg.impl)
             theta = picks.shape[0]
-            beta = max(theta - 2 * cfg.f, 1)
-
+            # Bulyan's coordinate stage IS MeaMed with f' = 2f on the
+            # selected stack: mean of max(theta - 2f, 1) values closest to
+            # the median — so the same streaming kernel serves both.
             def one(g):
                 S = g.reshape(W, -1)[picks]
-                return aggregators.mean_around(
-                    S, jnp.median(S, axis=0), beta).reshape(g.shape[1:])
+                return coord_stat(S, op="meamed", f=2 * cfg.f,
+                                  impl=cfg.impl).reshape(g.shape[1:])
 
             d = jax.tree.map(one, tree)
             c = jnp.zeros((W,), jnp.float32).at[picks].add(1.0 / theta)
@@ -384,13 +388,13 @@ def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None,
 
         selected, theta = aggregators.masked_bulyan_select(D2, cfg.f, mask)
         sel_f = selected.astype(jnp.float32)
-        beta = jnp.clip(theta - 2 * cfg.f, 1, theta)
 
         def one_masked(g):
-            M = g.reshape(W, -1)
-            center = aggregators.masked_median(M, sel_f)
-            return aggregators.masked_mean_around(
-                M, center, beta, sel_f).reshape(g.shape[1:])
+            # masked MeaMed over the selected workers: W_a = theta, so the
+            # keep-count max(W_a - 2f, 1) equals Bulyan's beta.
+            return coord_stat(g.reshape(W, -1), op="meamed", f=2 * cfg.f,
+                              impl=cfg.impl, mask=sel_f
+                              ).reshape(g.shape[1:])
 
         d = jax.tree.map(one_masked, tree)
         return d, {"weights": sel_f / jnp.maximum(theta, 1)}

@@ -241,15 +241,20 @@ def sharded_aggregate_tree(tree, cfg, *, mesh: Mesh, gram=None, mask=None):
     if cfg.name in agg.COORDWISE_RULES:
         # Coordinate-wise rules commute with the coordinate sharding:
         # each device applies the rule to its own shard, no communication.
+        # coord_stat dispatches cfg.impl per shard — the per-coordinate
+        # math is independent of the shard blocking, so the sharded result
+        # is bit-identical to single-device on either backend.
+        from repro.kernels.coord_stats.ops import coord_stat
         if mask is None:
-            fn = aggregators.get_aggregator(cfg.name)
             outs = _leafwise_shard_map(
-                leaves, mesh, axes, lambda M: fn(M, f=cfg.f))
+                leaves, mesh, axes,
+                lambda M: coord_stat(M, op=cfg.name, f=cfg.f, impl=cfg.impl))
             return treedef.unflatten(outs), {
                 "weights": jnp.full((W,), 1.0 / W, jnp.float32)}
-        mfn = aggregators.MASKED_COORDWISE[cfg.name]
         outs = _leafwise_shard_map(
-            leaves, mesh, axes, lambda M, m: mfn(M, m, f=cfg.f), mask)
+            leaves, mesh, axes,
+            lambda M, m: coord_stat(M, op=cfg.name, f=cfg.f, impl=cfg.impl,
+                                    mask=m), mask)
         wa = jnp.maximum(jnp.sum(mask), 1.0)
         return treedef.unflatten(outs), {"weights": mask / wa}
 
@@ -258,15 +263,16 @@ def sharded_aggregate_tree(tree, cfg, *, mesh: Mesh, gram=None, mask=None):
         # selected workers is coordinate-wise (shard-local).
         K = psummed_gram()
         D2 = aggregators.sq_dists_from_gram(K)
+        from repro.kernels.coord_stats.ops import bulyan_select, coord_stat
         if mask is None:
-            picks = aggregators.bulyan_select(D2, cfg.f)
+            picks = bulyan_select(D2, f=cfg.f, impl=cfg.impl)
             theta = picks.shape[0]
-            beta = max(theta - 2 * cfg.f, 1)
 
+            # Bulyan's coordinate stage == MeaMed with f' = 2f on the
+            # selected stack (keep-count max(theta - 2f, 1) = beta).
             def one(M, picks_):
-                S = M[picks_]
-                return aggregators.mean_around(
-                    S, jnp.median(S, axis=0), beta)
+                return coord_stat(M[picks_], op="meamed", f=2 * cfg.f,
+                                  impl=cfg.impl)
 
             outs = _leafwise_shard_map(leaves, mesh, axes, one, picks)
             c = jnp.zeros((W,), jnp.float32).at[picks].add(1.0 / theta)
@@ -274,14 +280,13 @@ def sharded_aggregate_tree(tree, cfg, *, mesh: Mesh, gram=None, mask=None):
 
         selected, theta = aggregators.masked_bulyan_select(D2, cfg.f, mask)
         sel_f = selected.astype(jnp.float32)
-        beta = jnp.clip(theta - 2 * cfg.f, 1, theta)
 
-        def one_masked(M, sel, beta_):
-            center = aggregators.masked_median(M, sel)
-            return aggregators.masked_mean_around(M, center, beta_, sel)
+        def one_masked(M, sel):
+            # masked MeaMed with W_a = theta: keep-count max(theta-2f, 1).
+            return coord_stat(M, op="meamed", f=2 * cfg.f, impl=cfg.impl,
+                              mask=sel)
 
-        outs = _leafwise_shard_map(leaves, mesh, axes, one_masked, sel_f,
-                                   beta)
+        outs = _leafwise_shard_map(leaves, mesh, axes, one_masked, sel_f)
         return treedef.unflatten(outs), {
             "weights": sel_f / jnp.maximum(theta, 1)}
 

@@ -1,9 +1,30 @@
-"""Public wrapper for coordinate-wise robust stats (see gram/ops.py)."""
+"""Public wrappers for the coordinate-wise / selection kernels.
+
+Same ``impl`` convention as :mod:`repro.kernels.gram.ops`:
+
+  - ``"xla"``             — the pure-jnp references (also the oracles),
+  - ``"pallas"``          — the selection network: ``pallas_call`` on TPU,
+    the fused XLA network lowering (:mod:`.net`) elsewhere — the Pallas
+    interpreter cannot fuse the rounds on CPU, the net lowering can (see
+    net.py's docstring for the measured gap),
+  - ``"pallas_interpret"`` — the true Pallas interpreter everywhere (this
+    is how CI exercises the kernel path on CPU).
+
+``coord_stat`` accepts the membership ``mask=`` of the distributed layer;
+masked calls route to the dynamic-order-statistic network (or the
+``masked_*`` references), so dynamic worker subsets never trigger a
+recompile on any path.
+"""
 
 from __future__ import annotations
 
 from repro.kernels.gram.ops import on_tpu
-from repro.kernels.coord_stats.kernel import coord_stats_pallas
+from repro.kernels.coord_stats.kernel import (
+    bulyan_select_pallas,
+    coord_stats_pallas,
+    krum_scores_pallas,
+)
+from repro.kernels.coord_stats.net import coord_stats_net
 from repro.kernels.coord_stats import ref
 
 _REFS = {
@@ -13,18 +34,54 @@ _REFS = {
     "phocas": ref.phocas_ref,
 }
 
+COORD_OPS = tuple(_REFS)
+
+
+def _interpret(impl: str) -> bool:
+    if impl == "pallas":
+        return not on_tpu()
+    if impl == "pallas_interpret":
+        return True
+    raise ValueError(f"unknown impl {impl!r}")
+
 
 def coord_stat(Gw, *, op: str, f: int = 1, impl: str = "xla",
-               block_n: int = 2048):
-    """Coordinate-wise robust statistic. op: median|trimmed_mean|meamed|phocas."""
+               block_n: int = 2048, mask=None):
+    """Coordinate-wise robust statistic.  Gw: (p, n) -> (n,).
+
+    op: median | trimmed_mean | meamed | phocas.  ``mask`` is an optional
+    traced (p,) active-worker membership vector (bool or 0/1).
+    """
     if op not in _REFS:
         raise ValueError(f"unknown op {op!r}")
     if impl == "xla":
-        return _REFS[op](Gw, f)
-    if impl == "pallas":
-        return coord_stats_pallas(Gw, op=op, f=f, block_n=block_n,
-                                  interpret=not on_tpu())
-    if impl == "pallas_interpret":
-        return coord_stats_pallas(Gw, op=op, f=f, block_n=block_n,
-                                  interpret=True)
-    raise ValueError(f"unknown impl {impl!r}")
+        if mask is None:
+            return _REFS[op](Gw, f)
+        from repro.core.aggregators import MASKED_COORDWISE
+        return MASKED_COORDWISE[op](Gw, mask, f=f)
+    if impl == "pallas" and not on_tpu():
+        out = coord_stats_net(Gw, mask, op=op, f=f)
+        return out.astype(Gw.dtype)
+    out = coord_stats_pallas(Gw, mask, op=op, f=f, block_n=block_n,
+                             interpret=_interpret(impl))
+    # kernel accumulates and emits fp32; hand back the caller's dtype so
+    # the leafwise tree path keeps leaf dtypes like the XLA references do.
+    return out.astype(Gw.dtype)
+
+
+def krum_scores(D2, *, f: int = 1, impl: str = "xla"):
+    """Krum score per worker from (p, p) squared distances -> (p,)."""
+    if impl == "xla" or (impl == "pallas" and not on_tpu()):
+        # the (p, p) selection problem is tiny — off-TPU the jnp reference
+        # IS the production lowering; the interpreter is opt-in only.
+        from repro.core.aggregators import krum_scores as _ref
+        return _ref(D2, f)
+    return krum_scores_pallas(D2, f=f, interpret=_interpret(impl))
+
+
+def bulyan_select(D2, *, f: int = 1, impl: str = "xla"):
+    """Bulyan's theta = max(p - 2f, 1) picks, lowest-Krum-score-first."""
+    if impl == "xla" or (impl == "pallas" and not on_tpu()):
+        from repro.core.aggregators import bulyan_select as _ref
+        return _ref(D2, f)
+    return bulyan_select_pallas(D2, f=f, interpret=_interpret(impl))

@@ -1,4 +1,26 @@
-"""Pure-jnp oracles for the coordinate-wise robust statistics kernel."""
+"""Pure-jnp references for the coordinate-wise robust statistics.
+
+**Single source of truth.**  These are simultaneously
+
+  1. the XLA production path (``impl="xla"`` in
+     :func:`repro.kernels.coord_stats.ops.coord_stat`),
+  2. the oracles the Pallas selection-network kernel is property-tested
+     against, and
+  3. the implementations behind the public baseline aggregators —
+     :mod:`repro.core.aggregators` imports *these* rather than keeping its
+     own copies, so the kernel oracle and the user-facing rule can never
+     drift apart (``tests/test_coord_stats.py`` asserts the wiring).
+
+Clamping conventions (shared with the masked variants and the kernel):
+``trimmed_mean_ref`` trims ``k = min(f, (p - 1) // 2)`` per side (an
+over-aggressive ``f`` degrades to the median-ish middle rather than an
+empty slice); ``meamed_ref`` / ``phocas_ref`` keep ``max(p - f, 1)``
+values.
+
+This module is deliberately pure ``jax.numpy`` — no Pallas import — so the
+``core`` layer can depend on it without pulling kernel machinery into the
+baseline aggregators.
+"""
 
 from __future__ import annotations
 
@@ -11,25 +33,36 @@ def median_ref(Gw: jnp.ndarray) -> jnp.ndarray:
 
 
 def trimmed_mean_ref(Gw: jnp.ndarray, f: int) -> jnp.ndarray:
-    """Mean after dropping the f largest and f smallest per coordinate."""
+    """Mean after dropping the k largest and k smallest per coordinate,
+    k = min(f, (p - 1) // 2)."""
     p = Gw.shape[0]
+    k = min(f, (p - 1) // 2)
     s = jnp.sort(Gw, axis=0)
-    return jnp.mean(s[f:p - f], axis=0)
+    return jnp.mean(s[k:p - k], axis=0) if k > 0 else jnp.mean(s, axis=0)
+
+
+def mean_around_ref(Gw: jnp.ndarray, center: jnp.ndarray,
+                    k: int) -> jnp.ndarray:
+    """Mean of the k values closest to ``center``, per coordinate.
+
+    Stable argsort on |Gw - center| (ties keep worker order), matching the
+    strict-``>`` compare-exchange of the Pallas selection network.
+    """
+    d = jnp.abs(Gw - center[None, :])
+    order = jnp.argsort(d, axis=0)
+    gathered = jnp.take_along_axis(Gw, order[:k], axis=0)
+    return jnp.mean(gathered, axis=0)
 
 
 def meamed_ref(Gw: jnp.ndarray, f: int) -> jnp.ndarray:
-    """Mean of the p-f values closest to the coordinate-wise median."""
+    """Mean-around-median: mean of the max(p - f, 1) values closest to the
+    coordinate-wise median [Xie et al. 2018]."""
     p = Gw.shape[0]
-    med = jnp.median(Gw, axis=0)
-    d = jnp.abs(Gw - med[None, :])
-    order = jnp.argsort(d, axis=0)
-    return jnp.mean(jnp.take_along_axis(Gw, order[:p - f], axis=0), axis=0)
+    return mean_around_ref(Gw, median_ref(Gw), max(p - f, 1))
 
 
 def phocas_ref(Gw: jnp.ndarray, f: int) -> jnp.ndarray:
-    """Mean of the p-f values closest to the trimmed mean."""
+    """Phocas: mean of the max(p - f, 1) values closest to the trimmed
+    mean [Xie et al. 2018]."""
     p = Gw.shape[0]
-    tm = trimmed_mean_ref(Gw, f)
-    d = jnp.abs(Gw - tm[None, :])
-    order = jnp.argsort(d, axis=0)
-    return jnp.mean(jnp.take_along_axis(Gw, order[:p - f], axis=0), axis=0)
+    return mean_around_ref(Gw, trimmed_mean_ref(Gw, f), max(p - f, 1))

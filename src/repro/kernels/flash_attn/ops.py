@@ -13,9 +13,12 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
     if impl == "xla":
         return flash_attn_ref(q, k, v, causal=causal, window=window, scale=scale)
     if impl == "pallas":
+        if not on_tpu():                # production fallback off-TPU
+            return flash_attn_ref(q, k, v, causal=causal, window=window,
+                                  scale=scale)
         return flash_attn_pallas(q, k, v, causal=causal, window=window,
                                  scale=scale, block_q=block_q, block_k=block_k,
-                                 interpret=not on_tpu())
+                                 interpret=False)
     if impl == "pallas_interpret":
         return flash_attn_pallas(q, k, v, causal=causal, window=window,
                                  scale=scale, block_q=block_q, block_k=block_k,

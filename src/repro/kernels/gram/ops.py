@@ -15,6 +15,16 @@ block_n-wide chunk, rescale by the exact inverse sampling fraction.
 Callers pick the backend via ``impl=``; the distributed aggregator
 defaults to ``xla`` so the multi-pod dry-run lowers on the host platform,
 and flips to ``pallas`` on real TPU via config.
+
+``impl`` convention (shared by every ``kernels/*/ops.py``):
+
+  - ``"xla"``              — the jnp reference (also the test oracle),
+  - ``"pallas"``           — the *production* kernel path: ``pallas_call``
+    on TPU, the best available XLA lowering elsewhere.  The interpreter is
+    never a production path — it re-executes the grid machinery op by op
+    and is orders of magnitude off the roofline on CPU,
+  - ``"pallas_interpret"`` — force the true Pallas interpreter everywhere
+    (how CI exercises the kernel path on CPU).
 """
 
 from __future__ import annotations
@@ -35,7 +45,9 @@ def gram(G, *, impl: str = "xla", block_n: int = 1024):
     if impl == "xla":
         return gram_ref(G)
     if impl == "pallas":
-        return gram_pallas(G, block_n=block_n, interpret=not on_tpu())
+        if on_tpu():
+            return gram_pallas(G, block_n=block_n, interpret=False)
+        return gram_ref(G)              # production fallback off-TPU
     if impl == "pallas_interpret":
         return gram_pallas(G, block_n=block_n, interpret=True)
     raise ValueError(f"unknown impl {impl!r}")
@@ -71,7 +83,7 @@ def tree_gram_fused(leaves, *, sketch_stride: int = 1,
         contraction (accumulation stays fp32).
       impl: 'xla' | 'pallas' | 'pallas_interpret'.
     """
-    if impl == "xla":
+    if impl == "xla" or (impl == "pallas" and not on_tpu()):
         # XLA consumes the identical chunk plan piecewise (Gram
         # additivity) — packing here would only add a (W, n) copy that
         # the dot cannot amortize on CPU; the dispatch-count win the pack
@@ -84,7 +96,7 @@ def tree_gram_fused(leaves, *, sketch_stride: int = 1,
     X = pack_leaves(leaves, gram_dtype=gram_dtype)
     if impl == "pallas":
         return tree_gram_pallas(X, sketch_stride=sketch_stride,
-                                block_n=block_n, interpret=not on_tpu())
+                                block_n=block_n, interpret=False)
     if impl == "pallas_interpret":
         return tree_gram_pallas(X, sketch_stride=sketch_stride,
                                 block_n=block_n, interpret=True)

@@ -12,7 +12,10 @@ def weighted_sum(G, c, *, impl: str = "xla", block_n: int = 2048):
     if impl == "xla":
         return weighted_sum_ref(G, c)
     if impl == "pallas":
-        return weighted_sum_pallas(G, c, block_n=block_n, interpret=not on_tpu())
+        if on_tpu():
+            return weighted_sum_pallas(G, c, block_n=block_n,
+                                       interpret=False)
+        return weighted_sum_ref(G, c)   # production fallback off-TPU
     if impl == "pallas_interpret":
         return weighted_sum_pallas(G, c, block_n=block_n, interpret=True)
     raise ValueError(f"unknown impl {impl!r}")

@@ -20,7 +20,6 @@ import time
 from dataclasses import dataclass, field
 from functools import partial
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

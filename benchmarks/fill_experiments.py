@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import glob
 import json
-import re
 
 
 def repro_table():
@@ -75,11 +74,11 @@ def dryrun_summary():
             multis.append(r)
     lines = [
         f"* single-pod (16×16, 256 chips): **{len(singles)}/40 combinations "
-        f"lower + compile OK** (full roofline table below).",
+        "lower + compile OK** (full roofline table below).",
         f"* multi-pod (2×16×16, 512 chips): **{len(multis)}/40 OK** — the "
-        f"pod axis shards the worker/batch dims; remaining combinations "
-        f"regenerate with the same harness "
-        f"(`--mesh multi`; compile-bound on this 1-core host).",
+        "pod axis shards the worker/batch dims; remaining combinations "
+        "regenerate with the same harness "
+        "(`--mesh multi`; compile-bound on this 1-core host).",
     ]
     if fails:
         lines.append(f"* failures: {fails}")

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
+from repro.analysis import cache_size
 from repro.configs import get_config, reduce_for_smoke
 from repro.core.flag import FlagConfig
 from repro.data.pipeline import WorkerDataConfig, lm_worker_batches
@@ -72,7 +73,7 @@ def _one(scenario: str, kw: dict, agg: str, steps: int):
         loss = float(m["loss"])
         active.append(int(m.get("active_workers", W)))
     wall = time.time() - t0
-    compiles = step_fn._cache_size()
+    compiles = cache_size(step_fn)
     assert compiles == 1, (
         f"membership changes must not recompile: {scenario}/{agg} "
         f"compiled {compiles}x")

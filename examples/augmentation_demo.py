@@ -12,7 +12,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 

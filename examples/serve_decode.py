@@ -6,7 +6,6 @@
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.dist.serve_step import decode_loop

@@ -1,0 +1,41 @@
+"""repro.analysis — jaxpr/HLO contract checking (graph lint).
+
+The repo's strongest correctness guarantees are *graph-level*: the rank-p
+solver materializes no dimension beyond p, no device ever holds the full
+``(W, n)`` stack under a mesh, membership changes never recompile,
+low-precision inputs accumulate in fp32.  This package is the one
+enforced implementation of those invariants (docs/static_analysis.md):
+
+* :mod:`repro.analysis.hlo` — the HLO-text substrate (shape scan,
+  trip-count-corrected cost + collective parsing);
+* :mod:`repro.analysis.rules` — the rule families (SHAPE, PRECISION,
+  TRANSFER, MASK, COLLECTIVES) over captured :class:`Graph` objects;
+* :mod:`repro.analysis.recompile` — the RECOMPILE runtime harness
+  (``cache_size``, the generalized ``_cache_size() == 1``);
+* :mod:`repro.analysis.contract` — the ``@contract`` entry-point
+  decorator (zero-cost unless ``REPRO_CONTRACTS=1`` /
+  :func:`enable_contracts`);
+* :mod:`repro.analysis.entrypoints` — the public-entry-point sweep that
+  ``tools/jaxlint.py`` and the CI ``lint-contracts`` lane run.
+"""
+
+from repro.analysis.contract import (checking, contract, contracts_enabled,
+                                     enable_contracts)
+from repro.analysis.findings import (ContractViolation, Finding, Report,
+                                     format_findings)
+from repro.analysis.hlo import (CollectiveStats, HloCost, parse_collectives,
+                                parse_cost, shape_dims)
+from repro.analysis.recompile import (assert_no_recompile, cache_size,
+                                      check_recompile)
+from repro.analysis.rules import (RULES, Graph, capture, check_collectives,
+                                  check_mask, check_precision, check_shape,
+                                  check_transfer, full_width_dims)
+
+__all__ = [
+    "CollectiveStats", "ContractViolation", "Finding", "Graph", "HloCost",
+    "RULES", "Report", "assert_no_recompile", "cache_size", "capture",
+    "check_collectives", "check_mask", "check_precision", "check_recompile",
+    "check_shape", "check_transfer", "checking", "contract",
+    "contracts_enabled", "enable_contracts", "format_findings",
+    "full_width_dims", "parse_collectives", "parse_cost", "shape_dims",
+]

@@ -1,0 +1,200 @@
+"""The ``@contract`` decorator: declared graph invariants on entry points.
+
+Usage (see ``repro.dist.aggregation`` / ``repro.core.gram`` for the live
+sites)::
+
+    @contract(fp32_contractions=True, no_full_width=True, mask_traced=True)
+    def aggregate_tree(tree, cfg, *, gram=None, mask=None, sharded=None):
+        ...
+
+    @contract(max_dim=lambda K, *a, **k: K.shape[0])
+    def fa_weights_from_gram(K, cfg, *, solver="rank_p", mask=None):
+        ...
+
+Semantics:
+
+* **zero-cost when disabled** (the default): the wrapper is one global
+  boolean check and a tail call.  Enable with ``REPRO_CONTRACTS=1`` in
+  the environment, :func:`enable_contracts`, or the :func:`checking`
+  context manager — the test suite and ``tools/jaxlint.py`` do.
+* **checked at trace time, once per signature**: on the first call with
+  a given (shapes/dtypes + static config) signature the entry point is
+  traced to a jaxpr and the declared rules run; violations raise
+  :class:`repro.analysis.findings.ContractViolation`.  Later calls with
+  the same signature skip the (expensive) re-trace.
+* **jit-transparent**: when any argument is a tracer the wrapper passes
+  straight through — the enclosing jitted entry point is the one being
+  checked, and nested contracted calls must not re-trace inside it.
+
+Declared invariants:
+
+* ``max_dim`` — SHAPE: no tensor dimension in the traced graph exceeds
+  the bound; an int, or a callable of the call's ``(*args, **kwargs)``
+  (e.g. ``lambda K, *a, **k: K.shape[0]`` for the rank-p solver).  A
+  callable may return ``None`` to waive the bound for that call (the
+  q-space oracle solver legitimately materializes q-sized buffers).
+* ``no_full_width`` — SHAPE, active only when the call carries
+  ``sharded=``: the entry point is re-lowered with the worker-major tree
+  (the first positional argument) declared coordinate-sharded over the
+  mesh, and no per-device tensor may carry a full coordinate width (each
+  cleanly-divisible leaf's flat width, nor the concatenated total — see
+  :func:`repro.analysis.rules.full_width_dims`).
+* ``fp32_contractions`` — PRECISION over the traced jaxpr.
+* ``no_host_transfers`` — TRANSFER over the traced jaxpr.
+* ``mask_traced`` — MASK, active only when the call carries a non-None
+  ``mask=``: the mask must be consumable as a traced operand and
+  actually used.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from contextlib import contextmanager
+
+import jax
+
+from repro.analysis.findings import ContractViolation, Finding
+from repro.analysis.rules import (Graph, capture, check_mask,
+                                  check_precision, check_shape,
+                                  check_transfer, full_width_dims)
+
+__all__ = ["contract", "contracts_enabled", "enable_contracts", "checking"]
+
+
+class _State:
+    enabled = os.environ.get("REPRO_CONTRACTS", "").lower() in (
+        "1", "true", "on", "yes")
+
+
+def contracts_enabled() -> bool:
+    return _State.enabled
+
+
+def enable_contracts(on: bool = True) -> bool:
+    """Turn contract checking on/off; returns the previous setting."""
+    prev, _State.enabled = _State.enabled, bool(on)
+    return prev
+
+
+@contextmanager
+def checking(on: bool = True):
+    """Scoped :func:`enable_contracts` (the test-suite idiom)."""
+    prev = enable_contracts(on)
+    try:
+        yield
+    finally:
+        enable_contracts(prev)
+
+
+def _has_tracer(args, kwargs) -> bool:
+    return any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree.leaves((args, kwargs)))
+
+
+def _sig_key(args, kwargs):
+    def one(x):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            return ("arr", tuple(x.shape), str(x.dtype))
+        try:
+            return repr(x)
+        except Exception:
+            return type(x).__name__
+    leaves, treedef = jax.tree.flatten(
+        (args, kwargs),
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"))
+    return (str(treedef), tuple(one(leaf) for leaf in leaves))
+
+
+def _check_full_width(fn, name, args, kwargs) -> list[Finding]:
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.dist.sharded import coord_axes, n_coord_shards
+
+    # aggregate_tree-style entry points carry the mesh as ``sharded=``;
+    # sharded_aggregate_tree carries it as ``mesh=``.
+    sharded = kwargs.get("sharded")
+    if sharded is None:
+        sharded = kwargs.get("mesh")
+    if not sharded:
+        return []
+    if isinstance(sharded, Mesh):
+        mesh = sharded
+    else:
+        from repro.dist.sharding import current_mesh
+        mesh = current_mesh()
+        if mesh is None:
+            return []
+    tree = args[0]
+    shards = n_coord_shards(mesh)
+    forbidden, required = full_width_dims(tree, shards)
+    if not forbidden:
+        return []
+    axes = coord_axes(mesh)
+
+    def spec(leaf):
+        sharding = [None] * leaf.ndim
+        if leaf.ndim > 1 and leaf.shape[1] % shards == 0:
+            sharding[1] = axes
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, P(*sharding)))
+
+    tree_specs = jax.tree.map(spec, tree)
+    hlo = jax.jit(
+        lambda t: fn(t, *args[1:], **kwargs)).lower(
+            tree_specs).compile().as_text()
+    return check_shape(Graph(name, None, hlo), forbidden_dims=forbidden,
+                       require_dims=required)
+
+
+def contract(*, max_dim=None, no_full_width: bool = False,
+             fp32_contractions: bool = False,
+             no_host_transfers: bool = False, mask_traced: bool = False):
+    """Declare graph invariants on an entry point (see module docstring)."""
+
+    def deco(fn):
+        name = getattr(fn, "__qualname__", getattr(fn, "__name__", "entry"))
+        checked: set = set()
+
+        def run_checks(args, kwargs):
+            findings: list[Finding] = []
+            if max_dim is not None or fp32_contractions or no_host_transfers:
+                graph = capture(fn, *args, name=name, compile=False,
+                                **kwargs)
+                if max_dim is not None:
+                    bound = (max_dim(*args, **kwargs) if callable(max_dim)
+                             else int(max_dim))
+                    if bound is not None:  # callable may waive the bound
+                        findings += check_shape(graph, max_dim=int(bound))
+                if fp32_contractions:
+                    findings += check_precision(graph)
+                if no_host_transfers:
+                    findings += check_transfer(graph)
+            if mask_traced and kwargs.get("mask") is not None:
+                mask = kwargs["mask"]
+                rest = {k: v for k, v in kwargs.items() if k != "mask"}
+                findings += check_mask(
+                    lambda m: fn(*args, mask=m, **rest), mask, name=name)
+            if no_full_width:
+                findings += _check_full_width(fn, name, args, kwargs)
+            if findings:
+                raise ContractViolation(findings, name=name)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            if not _State.enabled or _has_tracer(args, kwargs):
+                return fn(*args, **kwargs)
+            key = _sig_key(args, kwargs)
+            if key not in checked:
+                run_checks(args, kwargs)
+                checked.add(key)
+            return fn(*args, **kwargs)
+
+        wrapper.__contract__ = {
+            "max_dim": max_dim, "no_full_width": no_full_width,
+            "fp32_contractions": fp32_contractions,
+            "no_host_transfers": no_host_transfers,
+            "mask_traced": mask_traced}
+        wrapper.__wrapped__ = fn
+        return wrapper
+
+    return deco

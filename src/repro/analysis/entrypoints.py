@@ -1,0 +1,335 @@
+"""The public-entry-point sweep: what ``tools/jaxlint.py`` checks.
+
+One place defines which graphs get linted and against which contracts —
+the CLI, the CI ``lint-contracts`` lane, and the tier-1 "entry points
+are lint-clean" acceptance test (``tests/test_analysis.py``) all consume
+:func:`run_sweep`.  Coverage:
+
+* ``fa_weights_from_gram`` (rank-p solver) — SHAPE ``max_dim = p`` on
+  the compiled HLO (PR 3's no-q-space invariant), PRECISION, TRANSFER.
+* ``aggregate_tree`` for **all 11 rules** × {plain, masked, sketch} —
+  PRECISION + TRANSFER on the traced jaxpr; MASK on the masked variant.
+* ``compressed_aggregate`` (CountSketch gram-feed and signSGD+EF) —
+  PRECISION + TRANSFER + MASK.
+* serve path (prefill + one-token decode) on the reduced config at
+  **bf16 compute** — PRECISION + TRANSFER (the production inference
+  dtype; the fp32 smoke dtype would vacuously pass).
+* train step (churn faults, FA aggregator) — PRECISION + TRANSFER.
+* RECOMPILE harness — membership, the masked solver, and the serve step
+  must hold ``cache_size == 1`` across value sweeps.
+* sharded variants (needs >= 8 devices, e.g. under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — per-device
+  SHAPE no-full-width + COLLECTIVES byte budget + PRECISION + TRANSFER
+  on the compiled, partitioned HLO for all 11 rules.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Report
+from repro.analysis.recompile import check_recompile
+from repro.analysis.rules import (Graph, capture, check_collectives,
+                                  check_mask, check_precision, check_shape,
+                                  check_transfer, full_width_dims)
+
+__all__ = ["SWEEP_RULES", "sweep_entries", "run_sweep"]
+
+W = 8          # worker count for the aggregation entries
+SWEEP_RULES = ("mean", "flag", "pca", "median", "trimmed_mean", "meamed",
+               "phocas", "krum", "multi_krum", "bulyan", "geomed")
+
+
+@dataclass(frozen=True)
+class Entry:
+    name: str
+    run: object                       # () -> list[Finding]
+
+
+def _tree(seed: int = 0):
+    """Clean power-of-two widths so the sharded variants divide an
+    8-way mesh (1024 + 512 flat; total 1536)."""
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(W, 1024)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.normal(size=(W, 256, 2)),
+                                   jnp.float32)}}
+
+
+def _mask():
+    return jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1], jnp.float32)
+
+
+def _agg_cfg(name: str):
+    from repro.core.flag import FlagConfig
+    from repro.dist.aggregation import AggregatorConfig
+    return AggregatorConfig(name=name, f=1,
+                            flag=FlagConfig(lam=2.0, m=2, tol=0.0))
+
+
+def _graph_rules(graph: Graph):
+    return check_precision(graph) + check_transfer(graph)
+
+
+# ---------------------------------------------------------------------------
+# entry builders (lazy — nothing traces until Entry.run is called)
+# ---------------------------------------------------------------------------
+
+def _gram_solver_entry():
+    def run():
+        from repro.core.flag import FlagConfig
+        from repro.core.gram import fa_weights_from_gram, gram_matrix
+        p = 32
+        rng = np.random.default_rng(23)
+        K = gram_matrix(jnp.asarray(rng.normal(size=(4 * p, p)), jnp.float32))
+        cfg = FlagConfig(lam=float(p))
+        graph = capture(fa_weights_from_gram, K, cfg,
+                        name="fa_weights_from_gram", compile=True)
+        return (check_shape(graph, max_dim=p, require_dims={p})
+                + _graph_rules(graph))
+    return Entry("gram_solver/rank_p(p=32)", run)
+
+
+def _aggregate_entries():
+    from repro.dist.aggregation import GRAM_RULES, aggregate_tree
+    entries = []
+    for name in SWEEP_RULES:
+        variants = ["plain", "masked"]
+        if name in GRAM_RULES or name == "bulyan":
+            variants.append("sketch")
+
+        for variant in variants:
+            def run(name=name, variant=variant):
+                tree = _tree()
+                cfg = _agg_cfg(name)
+                if variant == "sketch":
+                    import dataclasses
+                    cfg = dataclasses.replace(cfg, sketch_stride=4)
+                if variant == "masked":
+                    findings = check_mask(
+                        lambda m: aggregate_tree(tree, cfg, mask=m),
+                        _mask(), name=f"aggregate_tree[{name}]")
+                    graph = Graph(
+                        f"aggregate_tree[{name}]",
+                        jax.make_jaxpr(lambda m: aggregate_tree(
+                            tree, cfg, mask=m))(_mask()))
+                    return findings + _graph_rules(graph)
+                graph = capture(aggregate_tree, tree, cfg,
+                                name=f"aggregate_tree[{name}]",
+                                compile=False)
+                return _graph_rules(graph)
+
+            entries.append(Entry(f"aggregate_tree/{name}/{variant}", run))
+    return entries
+
+
+def _compressed_entries():
+    from repro.comm import CommConfig, init_ef
+    from repro.dist.aggregation import compressed_aggregate
+
+    def run_sketch():
+        tree = _tree(1)
+        comm = CommConfig(codec="countsketch", sketch_ratio=0.25)
+        findings = check_mask(
+            lambda m: compressed_aggregate(tree, _agg_cfg("flag"), comm,
+                                           mask=m),
+            _mask(), name="compressed_aggregate[countsketch]")
+        graph = capture(compressed_aggregate, tree, _agg_cfg("flag"), comm,
+                        name="compressed_aggregate[countsketch]",
+                        compile=False)
+        return findings + _graph_rules(graph)
+
+    def run_ef():
+        tree = _tree(2)
+        comm = CommConfig(codec="signsgd")
+        params = jax.tree.map(lambda l: l[0], tree)
+        ef = init_ef(params, W)
+        graph = capture(compressed_aggregate, tree, _agg_cfg("mean"), comm,
+                        ef, name="compressed_aggregate[signsgd+ef]",
+                        compile=False)
+        return _graph_rules(graph)
+
+    return [Entry("compressed_aggregate/countsketch/gram-feed", run_sketch),
+            Entry("compressed_aggregate/signsgd/ef", run_ef)]
+
+
+def _serve_entries():
+    def _cfg_bf16():
+        from repro.configs import get_config, reduce_for_smoke
+        return reduce_for_smoke(get_config("smollm-360m")).replace(
+            frontend=None, num_prefix_embeds=0, compute_dtype="bfloat16")
+
+    def run_prefill():
+        from repro.dist.serve_step import build_prefill_step
+        from repro.models import transformer
+        cfg = _cfg_bf16()
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jnp.zeros((2, 16), jnp.int32)}
+        graph = capture(build_prefill_step(cfg), params, batch,
+                        name="prefill_step[bf16]", compile=False)
+        return _graph_rules(graph)
+
+    def run_decode():
+        from repro.dist.serve_step import build_serve_step
+        from repro.models import transformer
+        cfg = _cfg_bf16()
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        caches = transformer.init_caches(cfg, 2, 32, jnp.float32)
+        graph = capture(build_serve_step(cfg, max_len=32), params, caches,
+                        jnp.zeros((2, 1), jnp.int32),
+                        jnp.zeros((), jnp.int32),
+                        name="serve_step[bf16]", compile=False)
+        return _graph_rules(graph)
+
+    return [Entry("serve/prefill/bf16", run_prefill),
+            Entry("serve/decode/bf16", run_decode)]
+
+
+def _train_entry():
+    def run():
+        from repro.configs import get_config, reduce_for_smoke
+        from repro.core.flag import FlagConfig
+        from repro.dist.aggregation import AggregatorConfig
+        from repro.dist.membership import get_fault_schedule
+        from repro.dist.train_step import (TrainConfig, build_train_step,
+                                           init_train_state)
+        from repro.optim import constant, sgd
+        cfg = reduce_for_smoke(get_config("smollm-360m")).replace(
+            frontend=None, num_prefix_embeds=0)
+        Wt = 4
+        tc = TrainConfig(
+            aggregator=AggregatorConfig(
+                name="flag", flag=FlagConfig(lam=0.0, regularizer="none")),
+            faults=get_fault_schedule("churn", Wt, period=2, horizon=16))
+        opt = sgd(momentum=0.9)
+        params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        step = build_train_step(cfg, tc, opt, constant(1e-3))
+        rng = np.random.default_rng(7)
+        batch = {
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (Wt, 2, 16)), jnp.int32),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (Wt, 2, 16)), jnp.int32)}
+        graph = capture(step, params, opt_state, batch,
+                        jax.random.PRNGKey(1), jnp.zeros((), jnp.int32),
+                        name="train_step[flag+churn]", compile=False)
+        return _graph_rules(graph)
+
+    return Entry("train_step/flag/churn", run)
+
+
+def _recompile_entries():
+    def run_membership():
+        from repro.dist.membership import get_fault_schedule, membership_at
+        sched = get_fault_schedule("churn", 4, period=3, horizon=30)
+        f = jax.jit(lambda t: membership_at(sched, t, 4))
+        return check_recompile(
+            f, [(jnp.asarray(t, jnp.int32),) for t in range(6)],
+            name="membership_at")
+
+    def run_masked_solver():
+        from repro.core.flag import FlagConfig
+        from repro.core.gram import fa_weights_from_gram, gram_matrix
+        rng = np.random.default_rng(3)
+        K = gram_matrix(jnp.asarray(rng.normal(size=(32, W)), jnp.float32))
+        cfg = FlagConfig(lam=2.0, m=2, tol=0.0)
+        f = jax.jit(lambda k, m: fa_weights_from_gram(k, cfg, mask=m))
+        masks = [np.ones(W), np.r_[np.zeros(2), np.ones(W - 2)],
+                 np.r_[np.ones(W - 3), np.zeros(3)]]
+        return check_recompile(
+            f, [(K, jnp.asarray(m, jnp.float32)) for m in masks],
+            name="fa_weights_from_gram[masked]")
+
+    def run_serve():
+        from repro.configs import get_config, reduce_for_smoke
+        from repro.dist.serve_step import build_serve_step
+        from repro.models import transformer
+        cfg = reduce_for_smoke(get_config("smollm-360m")).replace(
+            frontend=None, num_prefix_embeds=0)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        caches = transformer.init_caches(cfg, 1, 16, jnp.float32)
+        f = jax.jit(build_serve_step(cfg, max_len=16))
+        tok = jnp.zeros((1, 1), jnp.int32)
+        variants = []
+        for t in range(3):
+            variants.append((params, caches, tok, jnp.asarray(t, jnp.int32)))
+        return check_recompile(f, variants, name="serve_step")
+
+    return [Entry("recompile/membership_at", run_membership),
+            Entry("recompile/fa_weights_masked", run_masked_solver),
+            Entry("recompile/serve_step", run_serve)]
+
+
+def _sharded_entries():
+    entries = []
+    for name in SWEEP_RULES:
+        def run(name=name):
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.dist.aggregation import aggregate_tree
+            from repro.dist.sharded import coord_axes, n_coord_shards
+            from repro.launch.mesh import make_host_mesh
+            tree = _tree()
+            mesh = make_host_mesh(8)
+            shards = n_coord_shards(mesh)
+            axes = coord_axes(mesh)
+            forbidden, required = full_width_dims(tree, shards)
+            specs = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(
+                    l.shape, l.dtype,
+                    sharding=NamedSharding(
+                        mesh, P(None, axes, *([None] * (l.ndim - 2))))),
+                tree)
+            cfg = _agg_cfg(name)
+            hlo = jax.jit(
+                lambda t: aggregate_tree(t, cfg, sharded=mesh)).lower(
+                    specs).compile().as_text()
+            graph = Graph(f"aggregate_tree[{name},sharded]", None, hlo)
+            n_flat = sum(
+                math.prod(l.shape[1:]) for l in jax.tree.leaves(tree))
+            # budget: the wire story is O(n + W^2) per device — one (W, W)
+            # psum for the Gram plus at most one n-sized redistribution of
+            # the combined update; a naive W*n gradient exchange busts it.
+            budget = 4.0 * n_flat * 2 + 4.0 * W * W * 64
+            return (check_shape(graph, forbidden_dims=forbidden,
+                                require_dims=required)
+                    + check_collectives(graph, shards,
+                                        max_bytes_per_device=budget)
+                    + check_precision(graph) + check_transfer(graph))
+
+        entries.append(Entry(f"aggregate_tree/{name}/sharded", run))
+    return entries
+
+
+def sweep_entries(*, sharded: str = "auto") -> list[Entry]:
+    """Every lintable entry point.
+
+    ``sharded``: ``'auto'`` includes the mesh variants iff >= 8 devices
+    are visible, ``'force'`` includes them unconditionally, ``'skip'``
+    leaves them out (the single-device tier-1 path — CI runs them in the
+    lint lane under a forced 8-device host platform).
+    """
+    entries = ([_gram_solver_entry()] + _aggregate_entries()
+               + _compressed_entries() + _serve_entries() + [_train_entry()]
+               + _recompile_entries())
+    want_sharded = (sharded == "force"
+                    or (sharded == "auto" and jax.device_count() >= 8))
+    if want_sharded:
+        entries += _sharded_entries()
+    return entries
+
+
+def run_sweep(*, sharded: str = "auto", names=None,
+              progress=None) -> Report:
+    """Run the sweep; returns a :class:`Report` (``.clean`` gates CI)."""
+    report = Report()
+    for entry in sweep_entries(sharded=sharded):
+        if names and not any(s in entry.name for s in names):
+            continue
+        if progress:
+            progress(entry.name)
+        report.add(entry.name, entry.run())
+    return report

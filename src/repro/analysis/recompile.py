@@ -1,0 +1,78 @@
+"""RECOMPILE: the cache-size harness — the one implementation of
+``_cache_size() == 1``.
+
+Traced-vs-static hazards are a *runtime* property of a jitted entry
+point: a membership mask baked in as a static Python value, a step index
+branched on in Python, a shape derived from data — all compile a fresh
+executable per distinct value.  The invariant the repo has relied on
+since PR 4 (``tests/test_membership.py``, ``benchmarks/
+membership_churn.py``) is that a correctly traced entry point compiles
+exactly once across every argument variant.  This module generalizes
+that assert to any entry point and any variant sweep, with structured
+findings; the old ad-hoc ``fn._cache_size() == 1`` asserts route through
+here.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.findings import ContractViolation, Finding
+from repro.analysis.rules import RULES
+
+__all__ = ["cache_size", "check_recompile", "assert_no_recompile"]
+
+
+def cache_size(fn) -> int:
+    """Number of compiled executables a ``jax.jit`` function holds.
+
+    Accepts the jitted callable itself or anything wrapping one that
+    forwards ``_cache_size`` (jax's own private-but-stable probe — kept
+    in exactly one place so a jax rename is a one-line fix).
+    """
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        raise TypeError(
+            f"cache_size: {fn!r} does not expose a compilation cache — "
+            "pass the jax.jit-wrapped callable itself")
+    return probe()
+
+
+def check_recompile(fn, variants=(), *, name: str | None = None,
+                    max_compiles: int = 1) -> list[Finding]:
+    """Call ``fn`` over ``variants`` and flag excess compilations.
+
+    Args:
+      fn: a ``jax.jit``-wrapped entry point.
+      variants: iterable of argument tuples; each is invoked as
+        ``fn(*v)``.  Pass ``()`` to only inspect the cache as-is (the
+        caller already drove the function).
+      name: entry-point label for the finding.
+      max_compiles: allowed executable count (1 = fully traced).
+    Returns:
+      ``[]`` when the cache stayed within budget, else one ``recompile``
+      finding carrying the observed compile count.
+    """
+    name = name or getattr(fn, "__name__", "entry")
+    for v in variants:
+        fn(*v)
+    n = cache_size(fn)
+    if n <= max_compiles:
+        return []
+    return [Finding(
+        "recompile", "jit-cache", name,
+        f"cache_size={n} after {len(tuple(variants)) or 'caller-driven'} "
+        "variant(s)",
+        f"{name} compiled {n}x (budget {max_compiles}) — some argument "
+        "is consumed as a static Python value instead of a traced "
+        "operand")]
+
+
+def assert_no_recompile(fn, variants=(), *, name: str | None = None,
+                        max_compiles: int = 1) -> None:
+    """Raise :class:`ContractViolation` if ``fn`` recompiled."""
+    findings = check_recompile(fn, variants, name=name,
+                               max_compiles=max_compiles)
+    if findings:
+        raise ContractViolation(findings, name=name or "recompile")
+
+
+RULES["recompile"] = check_recompile

@@ -16,13 +16,12 @@ train step on a pod and in the CPU benchmarks.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.flag import FlagConfig, default_m
+from repro.core.flag import FlagConfig
 from repro.core.gram import fa_weights_from_gram, gram_matrix
 # Single source for the coordinate-wise statistics: the kernel oracles in
 # kernels/coord_stats/ref.py (pure jnp, no Pallas import) ARE the

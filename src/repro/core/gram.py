@@ -98,6 +98,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
+from repro.analysis.contract import contract
 from repro.core import beta_mle
 from repro.core.flag import FlagConfig, default_m, effective_norms
 
@@ -385,6 +386,13 @@ def _fa_weights_rank_p(K: jnp.ndarray, cfg: FlagConfig,
     return c, aux
 
 
+# The rank-p contract: with the default solver no traced array carries a
+# dimension beyond p = K.shape[0]; the qspace oracle waives the bound (it
+# materializes q = p + p(p-1)/2 by design).  Checked under
+# REPRO_CONTRACTS=1; tests/test_gram_solvers.py pins both directions.
+@contract(max_dim=lambda K, *a, **kw: (
+    int(K.shape[0]) if kw.get("solver", "rank_p") == "rank_p" else None),
+    no_host_transfers=True, mask_traced=True)
 @partial(jax.jit, static_argnames=("cfg", "solver"))
 def fa_weights_from_gram(K: jnp.ndarray, cfg: FlagConfig = FlagConfig(), *,
                          solver: str = "rank_p",

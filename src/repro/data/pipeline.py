@@ -8,7 +8,7 @@ workers apply the paper's nonlinear schemes to their share of samples.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -55,6 +55,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contract import contract
 from repro.comm.compressors import CommConfig, dense_bits, get_codec
 from repro.comm.error_feedback import ef_encode_decode
 from repro.core import aggregators
@@ -277,9 +278,18 @@ GRAM_RULES = frozenset({"flag", "pca", "mean", "geomed", "krum",
 COORDWISE_RULES = frozenset({"median", "trimmed_mean", "meamed", "phocas"})
 
 
+@contract(fp32_contractions=True, no_host_transfers=True, mask_traced=True,
+          no_full_width=True)
 def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None,
                    sharded=None):
     """Aggregate a worker-major gradient pytree.
+
+    Carries the graph contract (checked under ``REPRO_CONTRACTS=1`` /
+    :func:`repro.analysis.enable_contracts`, free otherwise): fp32
+    accumulation for every low-precision contraction, no host transfers
+    in the graph, the membership mask consumed as a traced operand, and —
+    with ``sharded=`` — no per-device tensor holding a full coordinate
+    width.
 
     Args:
       tree: worker-major gradient pytree, every leaf shaped ``(W, ...)``.
@@ -407,10 +417,17 @@ def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None,
 # codec x aggregator bridge (the worker->server compressed path)
 # ---------------------------------------------------------------------------
 
+@contract(fp32_contractions=True, no_host_transfers=True, mask_traced=True,
+          no_full_width=True)
 def compressed_aggregate(tree, cfg: AggregatorConfig,
                          comm: CommConfig = CommConfig(), ef=None, *,
                          mask=None, sharded=None):
     """Aggregate through a worker->server compression codec.
+
+    Carries the same graph contract as :func:`aggregate_tree` (fp32
+    contractions, no host transfers, traced mask, no per-device full
+    coordinate width under a mesh), extended over the codec
+    encode/decode and EF stages.
 
     Routing (see docs/compression.md for the dataflow diagrams):
 

@@ -57,6 +57,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis.contract import contract
+
 __all__ = ["coord_axes", "n_coord_shards", "sharded_tree_gram",
            "sharded_tree_combine", "sharded_aggregate_tree"]
 
@@ -207,6 +209,8 @@ def sharded_tree_combine(tree, c: jnp.ndarray, mesh: Mesh, *,
     return treedef.unflatten(outs)
 
 
+@contract(fp32_contractions=True, no_host_transfers=True, mask_traced=True,
+          no_full_width=True)
 def sharded_aggregate_tree(tree, cfg, *, mesh: Mesh, gram=None, mask=None):
     """Mesh-sharded :func:`repro.dist.aggregation.aggregate_tree`.
 

@@ -32,7 +32,6 @@ import json
 import sys
 import time
 import traceback
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -225,7 +224,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
         hlo = compiled.as_text()
     except Exception:
         hlo = ""
-    from benchmarks.hlo_stats import parse_collectives, parse_cost
+    from repro.analysis.hlo import parse_collectives, parse_cost
     coll = parse_collectives(hlo, total_devices)
     hcost = parse_cost(hlo)
 
@@ -234,7 +233,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
         "elapsed_s": round(time.time() - t0, 1),
         "flops_per_device": cost.get("flops", 0.0),
         "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
-        # loop-corrected (while trip counts folded in; see hlo_stats):
+        # loop-corrected (while trip counts folded in; see repro.analysis.hlo):
         "flops_corrected_per_device": hcost.flops,
         "hbm_bytes_corrected_per_device": hcost.hbm_bytes,
         "flops_dots_raw_per_device": hcost.raw_flops,
@@ -268,7 +267,7 @@ def main(argv=None):
     ap.add_argument("--unroll", action="store_true",
                     help="unroll the layer stack (bigger HLO, slower "
                          "compile; collective counts are loop-corrected "
-                         "either way via hlo_stats)")
+                         "either way via repro.analysis.hlo)")
     ap.add_argument("--microbatch", type=int, default=0,
                     help="grad-accumulation splits per worker (0 = auto)")
     ap.add_argument("--agg", default="flag")

@@ -114,7 +114,7 @@ def main(argv=None):
         saved_total = checkpoint_meta(args.ckpt_dir)["extra"].get(
             "total_steps")
         if saved_total is not None and saved_total != total:
-            print(f"resume: using checkpointed horizon total_steps="
+            print("resume: using checkpointed horizon total_steps="
                   f"{saved_total} (ignoring --steps {total})")
             total = saved_total
         template = ((params, opt_state, ef) if comm.wants_ef

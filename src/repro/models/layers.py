@@ -35,7 +35,10 @@ def linear_init(key, d_in, d_out, *, use_bias=False, scale=1.0,
 
 
 def linear(p, x, compute_dtype=jnp.bfloat16):
-    y = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+    # bf16 operands, fp32 accumulator (PRECISION lint contract) — the
+    # MXU-native layout; result is cast back to the compute dtype.
+    y = jnp.matmul(x.astype(compute_dtype), p["w"].astype(compute_dtype),
+                   preferred_element_type=jnp.float32).astype(compute_dtype)
     if "b" in p:
         y = y + p["b"].astype(compute_dtype)
     return y
@@ -83,8 +86,11 @@ def embed(p, ids, compute_dtype=jnp.bfloat16):
 
 
 def unembed(p, x, compute_dtype=jnp.bfloat16):
-    """Logits (tied or untied table passed in p)."""
-    return x.astype(compute_dtype) @ p["table"].T.astype(compute_dtype)
+    """Logits (tied or untied table passed in p); fp32 accumulation."""
+    return jnp.matmul(x.astype(compute_dtype),
+                      p["table"].T.astype(compute_dtype),
+                      preferred_element_type=jnp.float32
+                      ).astype(compute_dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -66,9 +66,16 @@ def _expert_ffn(w_up, w_gate, w_down, x, cfg: ModelConfig):
     """Batched expert FFN.  x: (E, C, d) with per-expert weight banks."""
     cdt = jnp.dtype(cfg.compute_dtype)
     act = layers.ACTS[cfg.act]
-    up = jnp.einsum("ecd,edf->ecf", x.astype(cdt), w_up.astype(cdt))
-    gate = act(jnp.einsum("ecd,edf->ecf", x.astype(cdt), w_gate.astype(cdt)))
-    return jnp.einsum("ecf,efd->ecd", up * gate, w_down.astype(cdt))
+
+    def mm(sub, a, b):
+        # bf16 operands, fp32 accumulation (PRECISION lint contract)
+        return jnp.einsum(sub, a, b,
+                          preferred_element_type=jnp.float32).astype(cdt)
+
+    xc = x.astype(cdt)
+    up = mm("ecd,edf->ecf", xc, w_up.astype(cdt))
+    gate = act(mm("ecd,edf->ecf", xc, w_gate.astype(cdt)))
+    return mm("ecf,efd->ecd", up * gate, w_down.astype(cdt))
 
 
 def moe_apply(p, x, cfg: ModelConfig, *, capacity: int | None = None):
@@ -111,20 +118,23 @@ def moe_apply(p, x, cfg: ModelConfig, *, capacity: int | None = None):
     keep = pos < cap
     pos_c = jnp.where(keep, pos, cap)                              # oob => drop
 
-    buf = jnp.zeros((E, cap, d), cdt)
-    buf = buf.at[se, pos_c].add(xt[stok].astype(cdt), mode="drop")
-    buf = shard(buf, ("experts", None, "embed"))
+    # Dispatch/combine scatter-adds accumulate in fp32 (PRECISION lint
+    # contract — the combine genuinely collides: k slots per token).
+    buf = jnp.zeros((E, cap, d), jnp.float32)
+    buf = buf.at[se, pos_c].add(xt[stok].astype(jnp.float32), mode="drop")
+    buf = shard(buf.astype(cdt), ("experts", None, "embed"))
 
     y_exp = _expert_ffn(p["w_up"], p["w_gate"], p["w_down"], buf, cfg)
 
     gathered = y_exp.at[se, jnp.minimum(pos_c, cap - 1)].get(
         mode="fill", fill_value=0.0) * (keep * sp)[:, None]
-    y = jnp.zeros((T, d), cdt).at[stok].add(gathered)
+    y = jnp.zeros((T, d), jnp.float32).at[stok].add(
+        gathered.astype(jnp.float32))
 
     if "shared" in p:
         sh = p["shared"]
         xs = jnp.broadcast_to(xt[None], (m.num_shared, T, d))
         y_sh = _expert_ffn(sh["w_up"], sh["w_gate"], sh["w_down"], xs, cfg)
-        y = y + jnp.sum(y_sh, axis=0)
+        y = y + jnp.sum(y_sh.astype(jnp.float32), axis=0)
 
     return y.reshape(B, S, d).astype(x.dtype), losses

@@ -170,8 +170,10 @@ def _blockdiag_init(key, d, bs, dtype):
 def _blockdiag_apply(p, x, cdt):
     """Block-diagonal linear: x (..., d) with (nb, bs, bs) blocks."""
     nb, bs, _ = p["w"].shape
+    # fp32 accumulation on the bf16 block contraction (PRECISION lint)
     y = jnp.einsum("...nb,nbc->...nc", x.reshape(*x.shape[:-1], nb, bs)
-                   .astype(cdt), p["w"].astype(cdt))
+                   .astype(cdt), p["w"].astype(cdt),
+                   preferred_element_type=jnp.float32).astype(cdt)
     return y.reshape(*x.shape[:-1], nb * bs)
 
 

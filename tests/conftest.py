@@ -13,6 +13,23 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _drop_compile_caches():
+    """Release compiled executables between test modules.
+
+    The tier-1 suite compiles hundreds of XLA programs in one process;
+    on XLA:CPU the accumulated jit state eventually segfaults the
+    compiler partway through the run.  Nothing shares compiled functions
+    across module boundaries, so dropping the caches at each module
+    teardown keeps the native footprint bounded.  Per-test compile-count
+    assertions (``cache_size``) are intra-module and unaffected.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

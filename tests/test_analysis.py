@@ -1,0 +1,398 @@
+"""repro.analysis: the graph-lint subsystem's own test suite.
+
+One known-bad / known-good fixture pair per rule family (true positive
+AND true negative — a rule that cannot fire is worse than no rule), the
+``@contract`` decorator semantics (zero-cost off, violation on, tracer
+bypass, per-signature caching), the PRECISION lint-regression fixtures
+for the ``src/repro/models`` fixes this PR shipped, and the end-to-end
+"public entry points are lint-clean" acceptance sweep that
+``tools/jaxlint.py`` gates CI with.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.analysis as A
+from repro.analysis.entrypoints import run_sweep
+
+BF = jnp.bfloat16
+
+
+def _bf16_mats(m=4, k=8, n=4):
+    rng = np.random.default_rng(0)
+    return (jnp.asarray(rng.normal(size=(m, k)), BF),
+            jnp.asarray(rng.normal(size=(k, n)), BF))
+
+
+# ---------------------------------------------------------------------------
+# SHAPE
+# ---------------------------------------------------------------------------
+
+class TestShapeRule:
+    def test_max_dim_true_positive(self):
+        g = A.capture(lambda a: a @ a.T, jnp.ones((3, 5)), compile=False)
+        findings = A.check_shape(g, max_dim=4)
+        assert findings and all(f.rule == "shape" for f in findings)
+
+    def test_max_dim_true_negative(self):
+        g = A.capture(lambda a: a @ a.T, jnp.ones((3, 5)), compile=False)
+        assert A.check_shape(g, max_dim=5) == []
+
+    def test_forbidden_and_required_on_hlo(self):
+        x = jnp.ones((4, 16))
+        hlo = jax.jit(lambda a: a.sum(0)).lower(x).compile().as_text()
+        g = A.Graph("sum", None, hlo)
+        assert A.check_shape(g, forbidden_dims={16}, require_dims={16})
+        assert A.check_shape(g, forbidden_dims={999},
+                             require_dims={16}) == []
+
+    def test_required_dims_absent_is_a_finding(self):
+        """Detector sanity is part of the rule: requiring a dimension that
+        never appears means the check is not looking at the right graph."""
+        g = A.capture(lambda a: a * 2, jnp.ones((4,)), compile=False)
+        findings = A.check_shape(g, require_dims={777})
+        assert len(findings) == 1 and "required" in findings[0].message
+
+    def test_full_width_dims_derivation(self):
+        tree = {"a": jnp.zeros((8, 1024)), "b": jnp.zeros((8, 256, 2))}
+        forbidden, required = A.full_width_dims(tree, 8)
+        assert {1024, 512, 256, 1536} <= forbidden
+        assert {128, 64, 32} <= required
+        assert not (forbidden & required)
+
+    def test_needs_a_graph(self):
+        with pytest.raises(ValueError):
+            A.check_shape(A.Graph("empty"), max_dim=1)
+
+
+# ---------------------------------------------------------------------------
+# PRECISION
+# ---------------------------------------------------------------------------
+
+class TestPrecisionRule:
+    def test_bf16_matmul_true_positive(self):
+        x, w = _bf16_mats()
+        g = A.capture(lambda a, b: a @ b, x, w, compile=False)
+        findings = A.check_precision(g)
+        assert findings and findings[0].op == "dot_general"
+
+    def test_fp32_accumulated_matmul_true_negative(self):
+        x, w = _bf16_mats()
+
+        def fixed(a, b):
+            return jnp.matmul(a, b,
+                              preferred_element_type=jnp.float32).astype(BF)
+
+        assert A.check_precision(A.capture(fixed, x, w, compile=False)) == []
+
+    def test_bf16_accumulating_ops_true_positive(self):
+        # jnp.sum upcasts internally, but cumsum and scatter-add keep the
+        # operand dtype — both are bf16 accumulators the rule must flag
+        x, _ = _bf16_mats()
+        g = A.capture(lambda a: jnp.cumsum(a, axis=0), x, compile=False)
+        assert A.check_precision(g)
+        idx = jnp.asarray([0, 1, 0, 1])
+        g2 = A.capture(lambda a: jnp.zeros((2, 8), BF).at[idx].add(a),
+                       x, compile=False)
+        assert A.check_precision(g2)
+
+    def test_default_jnp_sum_true_negative(self):
+        """jnp.sum's built-in fp32 accumulation must not be flagged."""
+        x, _ = _bf16_mats()
+        g = A.capture(lambda a: a.sum(0), x, compile=False)
+        assert A.check_precision(g) == []
+
+    def test_fp32_graph_never_flags(self):
+        g = A.capture(lambda a: (a @ a.T).sum(), jnp.ones((6, 6)),
+                      compile=False)
+        assert A.check_precision(g) == []
+
+    def test_sees_through_jit_and_scan(self):
+        x, w = _bf16_mats()
+
+        @jax.jit
+        def scanned(a, b):
+            def body(c, _):
+                return c @ b, ()
+            out, _ = jax.lax.scan(body, a, None, length=3)
+            return out
+
+        g = A.capture(scanned, x, jnp.asarray(np.eye(8), BF), compile=False)
+        assert A.check_precision(g)
+
+
+# ---------------------------------------------------------------------------
+# TRANSFER
+# ---------------------------------------------------------------------------
+
+class TestTransferRule:
+    def test_pure_callback_true_positive(self):
+        def with_cb(x):
+            return jax.pure_callback(
+                lambda v: np.asarray(v) * 2,
+                jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+        g = A.capture(with_cb, jnp.ones((4,)), compile=False)
+        findings = A.check_transfer(g)
+        assert findings and "callback" in findings[0].op
+
+    def test_clean_graph_true_negative(self):
+        g = A.capture(lambda x: jnp.sin(x).sum(), jnp.ones((4,)),
+                      compile=False)
+        assert A.check_transfer(g) == []
+
+    def test_literal_device_put_is_not_a_transfer(self):
+        """Regression: jnp wraps Python scalars in device_put[devices=
+        [None]] — the q-space solver tripped this before the rule learned
+        to ignore the no-op form."""
+        g = A.capture(lambda x: x * 2 + 1, jnp.ones((4,)), compile=False)
+        assert A.check_transfer(g) == []
+
+
+# ---------------------------------------------------------------------------
+# MASK
+# ---------------------------------------------------------------------------
+
+class TestMaskRule:
+    MASK = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+
+    def test_traced_consumption_true_negative(self):
+        base = jnp.arange(4.0)
+        assert A.check_mask(lambda m: (m * base).sum(), self.MASK) == []
+
+    def test_python_branch_true_positive(self):
+        def branchy(m):
+            if m[0] > 0:                     # concretizes the tracer
+                return jnp.zeros(())
+            return jnp.ones(())
+
+        findings = A.check_mask(branchy, self.MASK, name="branchy")
+        assert findings and findings[0].op == "python-branch"
+
+    def test_ignored_mask_true_positive(self):
+        findings = A.check_mask(lambda m: jnp.arange(4.0).sum(), self.MASK,
+                                name="ignoring")
+        assert findings and findings[0].op == "<unused>"
+
+
+# ---------------------------------------------------------------------------
+# COLLECTIVES
+# ---------------------------------------------------------------------------
+
+_AR_HLO = """
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024] parameter(0)
+  ROOT %ar = f32[1024] all-reduce(%p0), replica_groups=[1,8]<=[8], to_apply=%add
+}
+"""
+
+
+class TestCollectivesRule:
+    # ring all-reduce of 4096 B over 8 devices: 4096 * 2 * 7/8 = 7168 B
+    def test_over_budget_true_positive(self):
+        g = A.Graph("ar", None, _AR_HLO)
+        findings = A.check_collectives(g, 8, max_bytes_per_device=1000.0)
+        assert findings and "7.168e+03" in findings[0].message
+
+    def test_within_budget_true_negative(self):
+        g = A.Graph("ar", None, _AR_HLO)
+        assert A.check_collectives(g, 8, max_bytes_per_device=1e6) == []
+
+    def test_requires_hlo(self):
+        g = A.capture(lambda x: x, jnp.ones(()), compile=False)
+        with pytest.raises(ValueError):
+            A.check_collectives(g, 8, max_bytes_per_device=1.0)
+
+
+# ---------------------------------------------------------------------------
+# RECOMPILE
+# ---------------------------------------------------------------------------
+
+class TestRecompileRule:
+    def test_shape_polymorphic_drive_true_positive(self):
+        f = jax.jit(lambda x: x.sum())
+        variants = [(jnp.ones((n,)),) for n in (3, 4, 5)]
+        findings = A.check_recompile(f, variants, name="shapeful")
+        assert findings and "compiled 3x" in findings[0].message
+
+    def test_value_variants_true_negative(self):
+        f = jax.jit(lambda x: x * 2)
+        variants = [(jnp.full((4,), float(i)),) for i in range(5)]
+        assert A.check_recompile(f, variants) == []
+
+    def test_assert_raises_contract_violation(self):
+        f = jax.jit(lambda x: x.sum())
+        with pytest.raises(A.ContractViolation):
+            A.assert_no_recompile(f, [(jnp.ones((n,)),) for n in (2, 3)])
+
+    def test_cache_size_rejects_plain_functions(self):
+        with pytest.raises(TypeError):
+            A.cache_size(lambda x: x)
+
+
+# ---------------------------------------------------------------------------
+# @contract
+# ---------------------------------------------------------------------------
+
+class TestContractDecorator:
+    def _bad(self):
+        calls = {"n": 0}
+
+        @A.contract(fp32_contractions=True)
+        def entry(a, b):
+            calls["n"] += 1
+            return a @ b
+
+        return entry, calls
+
+    def test_zero_cost_when_disabled(self):
+        entry, calls = self._bad()
+        x, w = _bf16_mats()
+        entry(x, w)                      # no checking machinery ran
+        assert calls["n"] == 1
+
+    def test_violation_when_enabled(self):
+        entry, _ = self._bad()
+        x, w = _bf16_mats()
+        with A.checking():
+            with pytest.raises(A.ContractViolation) as ei:
+                entry(x, w)
+        assert ei.value.findings[0].rule == "precision"
+        # ContractViolation is an AssertionError so plain asserts and the
+        # contract checks fail tests through one exception family
+        assert isinstance(ei.value, AssertionError)
+
+    def test_signature_cache_traces_once(self):
+        calls = {"n": 0}
+
+        @A.contract(fp32_contractions=True)
+        def entry(a):
+            calls["n"] += 1
+            return (a @ a.T).sum()
+
+        x = jnp.ones((3, 3))
+        with A.checking():
+            entry(x)                     # trace (1) + call (1)
+            entry(x)                     # cached signature: call only
+            assert calls["n"] == 3
+            entry(jnp.ones((4, 4)))      # new signature: trace + call
+            assert calls["n"] == 5
+
+    def test_tracer_args_bypass(self):
+        entry, calls = self._bad()
+        x, w = _bf16_mats()
+        with A.checking():
+            jax.jit(lambda a, b: entry(a, b))(x, w)  # no violation: the
+        assert calls["n"] == 1                       # enclosing jit owns it
+
+    def test_callable_max_dim_waiver(self):
+        @A.contract(max_dim=lambda a, *r, **kw: (
+            None if kw.get("oracle") else a.shape[0]))
+        def entry(a, *, oracle=False):
+            big = jnp.zeros((a.shape[0] * 3,))
+            return a.sum() + big.sum()
+
+        x = jnp.ones((4,))
+        with A.checking():
+            entry(x, oracle=True)        # waived
+            with pytest.raises(A.ContractViolation):
+                entry(x)
+
+    def test_enable_disable_scoping(self):
+        assert not A.contracts_enabled()
+        with A.checking():
+            assert A.contracts_enabled()
+        assert not A.contracts_enabled()
+
+    def test_metadata_and_wrapped(self):
+        entry, _ = self._bad()
+        assert entry.__contract__["fp32_contractions"] is True
+        assert callable(entry.__wrapped__)
+
+
+# ---------------------------------------------------------------------------
+# PRECISION lint-regression fixtures for the src/repro/models fixes
+# ---------------------------------------------------------------------------
+
+class TestModelPrecisionFixtures:
+    """Each graph here was flagged by the PRECISION rule before this PR
+    fixed it (fp32 accumulation on every bf16 contraction); these pin the
+    fixes.  The bf16 serve/prefill/decode entry points are swept
+    end-to-end by tools/jaxlint.py and TestEntryPointSweep."""
+
+    def _clean(self, fn, *args, **kwargs):
+        g = A.capture(fn, *args, compile=False, **kwargs)
+        findings = A.check_precision(g)
+        assert findings == [], "\n".join(f.render() for f in findings)
+
+    def test_linear_bf16(self):
+        from repro.models import layers
+        p = layers.linear_init(jax.random.PRNGKey(0), 16, 8)
+        x = jnp.ones((2, 16), BF)
+        self._clean(layers.linear, p, x)
+
+    def test_unembed_bf16(self):
+        from repro.models import layers
+        p = {"table": jnp.ones((32, 16))}
+        self._clean(layers.unembed, p, jnp.ones((2, 16), BF))
+
+    def test_moe_bf16(self):
+        from repro.models import moe as moe_lib
+        from repro.models.config import ModelConfig, MoESettings
+        cfg = ModelConfig(
+            name="t", arch_type="moe", num_layers=2, d_model=32, num_heads=4,
+            num_kv_heads=4, d_ff=64, vocab_size=64,
+            moe=MoESettings(num_experts=4, top_k=2, num_shared=2,
+                            d_expert=64, capacity_factor=4.0),
+            compute_dtype="bfloat16")
+        p = moe_lib.moe_init(jax.random.PRNGKey(0), cfg)
+        x = jnp.ones((2, 8, 32), BF)
+        self._clean(lambda: moe_lib.moe_apply(p, x, cfg))
+
+    def test_blockdiag_bf16(self):
+        from repro.models import ssm
+        p = ssm._blockdiag_init(jax.random.PRNGKey(0), 32, 8, jnp.float32)
+        self._clean(ssm._blockdiag_apply, p, jnp.ones((2, 32), BF), BF)
+
+    def test_codec_paths_bf16(self):
+        from repro.comm import CommConfig, init_ef
+        from repro.core import FlagConfig
+        from repro.dist.aggregation import (AggregatorConfig,
+                                            compressed_aggregate)
+        rng = np.random.default_rng(3)
+        tree = {"a": jnp.asarray(rng.normal(size=(4, 64)), BF)}
+        cfg = AggregatorConfig("flag", f=1, flag=FlagConfig(lam=2.0, m=2,
+                                                            tol=0.0))
+        cs = CommConfig(codec="countsketch", sketch_ratio=0.25)
+        self._clean(lambda: compressed_aggregate(tree, cfg, cs))
+        sg = CommConfig(codec="signsgd")
+        ef = init_ef({"a": jnp.zeros((64,), BF)}, 4)
+        self._clean(lambda: compressed_aggregate(tree, cfg, sg, ef))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the public entry points are lint-clean
+# ---------------------------------------------------------------------------
+
+class TestEntryPointSweep:
+    def test_fast_subset_is_lint_clean(self):
+        """Tier-1 acceptance: the aggregation-layer entry points (all the
+        cheap-to-trace ones) produce zero findings."""
+        report = run_sweep(
+            sharded="skip",
+            names=["gram_solver", "aggregate_tree/flag",
+                   "aggregate_tree/median", "aggregate_tree/krum",
+                   "compressed_aggregate", "recompile/membership_at",
+                   "recompile/fa_weights_masked"])
+        assert report.clean, "\n" + report.render()
+
+    @pytest.mark.slow
+    def test_full_sweep_is_lint_clean(self):
+        """The whole tools/jaxlint.py surface (CI runs this via the
+        gating lint-contracts lane; here it rides the slow lane too)."""
+        report = run_sweep(sharded="auto")
+        assert report.clean, "\n" + report.render()

@@ -5,7 +5,7 @@ Covers: codec round-trip/identity properties, EF-corrected mean recovery
 mean} finiteness through the real distributed train step, the >= 8x
 comm_bits reduction the acceptance criteria require, EF-compressed
 training staying within 5% of the uncompressed final loss under the
-lockstep attack config, and — via benchmarks.hlo_stats on the compiled
+lockstep attack config, and — via repro.analysis.hlo on the compiled
 step — that the CountSketch codec feeds FA's Gram path without ever
 materializing a decoded (W, n) stack.
 """
@@ -402,7 +402,7 @@ class TestSketchGramHlo:
         by exactly the Gram term 2 W^2 (n - k): the Gram contraction runs
         over sketch coordinates, and no decode reconstructs a (W, n) stack
         (which would *add* work instead of removing it)."""
-        from benchmarks.hlo_stats import parse_cost
+        from repro.analysis import parse_cost
         params, opt_state = train_state
 
         def lower(codec):

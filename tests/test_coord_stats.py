@@ -33,7 +33,6 @@ import sys
 from pathlib import Path
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
@@ -77,7 +76,6 @@ from repro.kernels.coord_stats.net import coord_stats_net
 from repro.kernels.coord_stats.ops import (
     COORD_OPS,
     bulyan_select,
-    coord_stat,
     krum_scores,
 )
 

@@ -12,9 +12,7 @@ from repro.core import FlagConfig, aggregators
 from repro.dist.aggregation import (AggregatorConfig, aggregate_tree,
                                     tree_gram, tree_combine)
 from repro.dist.train_step import TrainConfig, build_train_step, init_train_state
-from repro.models import transformer
 from repro.configs import ARCHS, get_config, reduce_for_smoke
-from repro.configs.shapes import token_batch_specs
 from repro.optim import sgd, adamw, constant
 
 

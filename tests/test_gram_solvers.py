@@ -18,11 +18,11 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.analysis import Graph, check_shape
 from repro.core.flag import FlagConfig, flag_aggregate
 from repro.core.gram import fa_weights_from_gram, gram_matrix
 from repro.dist.aggregation import tree_combine, tree_gram
 from repro.kernels.gram.ref import chunk_schedule, tree_gram_chunk_ref
-from benchmarks.hlo_stats import shape_dims
 
 PS = [2, 3, 5, 8, 16, 32]
 
@@ -146,25 +146,34 @@ class TestRankDeficientGrams:
 
 class TestNoQSpaceArrays:
     """Acceptance: the default solver at p=32 allocates nothing with a
-    dimension of size q = p + p(p-1)/2 = 528 (or any dim > p)."""
+    dimension of size q = p + p(p-1)/2 = 528 (or any dim > p).
 
-    def _hlo_dims(self, solver, p=32):
+    The mechanism is the SHAPE rule of :mod:`repro.analysis` — this test
+    only declares the bound; ``tools/jaxlint.py`` enforces the same
+    invariant over the public entry-point sweep.
+    """
+
+    def _graph(self, solver, p=32):
         rng = np.random.default_rng(23)
         K = jnp.asarray(rng.normal(size=(4 * p, p)), jnp.float32)
         K = gram_matrix(K)
         cfg = FlagConfig(lam=float(p))
         fn = jax.jit(lambda k: fa_weights_from_gram(k, cfg, solver=solver))
-        return shape_dims(fn.lower(K).compile().as_text())
+        return Graph(f"fa_weights/{solver}", None,
+                     fn.lower(K).compile().as_text())
 
     def test_rank_p_has_no_q_dim(self):
         p = 32
-        dims = self._hlo_dims("rank_p", p)
-        assert max(dims) <= p, f"rank-p solver materialized dims {dims}"
+        findings = check_shape(self._graph("rank_p", p), max_dim=p,
+                               require_dims={p})
+        assert not findings, "\n".join(f.render() for f in findings)
 
     def test_qspace_oracle_does_have_q_dim(self):
         """Detector sanity: the q-space path *does* materialize q-dims."""
         p, q = 32, 32 + 32 * 31 // 2
-        assert q in self._hlo_dims("qspace", p)
+        findings = check_shape(self._graph("qspace", p), max_dim=p)
+        assert findings, "SHAPE rule missed the q-space oracle's q-dims"
+        assert any(str(q) in f.message for f in findings)
 
 
 def _tree(seed: int, W: int, sizes=((8, 6), (30,), (4, 3, 2))):

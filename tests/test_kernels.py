@@ -8,7 +8,6 @@ locally."""
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

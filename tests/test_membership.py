@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.analysis import assert_no_recompile
 from repro.comm import CommConfig, init_ef
 from repro.core import FlagConfig
 from repro.core.gram import fa_weights_from_gram, gram_matrix
@@ -89,7 +90,7 @@ class TestFaultSchedules:
         f = jax.jit(lambda t: membership_at(s, t, 4))
         masks = {np.asarray(f(t).active).tobytes() for t in range(9)}
         assert len(masks) > 1
-        assert f._cache_size() == 1
+        assert_no_recompile(f, name="membership_at")  # RECOMPILE rule
 
 
 # ---------------------------------------------------------------------------
@@ -330,7 +331,7 @@ class TestTrainStepChurn:
                 np.asarray(m["worker_staleness"]) > 0)))
         assert len(set(out_worker)) > 1, out_worker
         # ...and membership changed across the run on ONE compilation
-        assert step_fn._cache_size() == 1
+        assert_no_recompile(step_fn, name="train_step/churn")
 
     def test_trivial_schedule_has_no_membership_metrics(self):
         cfg = reduce_for_smoke(get_config("smollm-360m")).replace(

@@ -8,7 +8,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.models import transformer
-from repro.models.config import ModelConfig
 from repro.models import ssm, rglru as rglru_lib, layers
 from repro.configs import ARCHS, get_config, reduce_for_smoke
 

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.analysis import Graph, check_shape
 from repro.comm import CommConfig, init_ef
 from repro.core import FlagConfig
 from repro.dist.aggregation import (GRAM_RULES, AggregatorConfig,
@@ -47,7 +48,6 @@ from repro.dist.train_step import (TrainConfig, build_train_step,
 from repro.configs import get_config, reduce_for_smoke
 from repro.launch.mesh import make_host_mesh
 from repro.optim import constant, sgd
-from benchmarks.hlo_stats import shape_dims
 
 NDEV = jax.device_count()
 needs_mesh = pytest.mark.skipif(
@@ -264,13 +264,14 @@ class TestNoFullCoordinateDim:
 
     @pytest.mark.parametrize("name", ["flag", "mean", "median", "bulyan"])
     def test_no_device_tensor_holds_full_width(self, name):
-        dims = shape_dims(self._compiled_text(name))
-        full = {8192, 4096, 2048, 8192 + 4096}
-        hit = full & dims
-        assert not hit, (f"{name}: per-device HLO carries full unsharded "
-                         f"coordinate dims {sorted(hit)}")
-        # detector sanity: the per-shard widths ARE present
-        assert {8192 // 8, 4096 // 8} & dims
+        # mechanism = the SHAPE rule (forbidden + required-dims sanity);
+        # this test only declares the dims, tools/jaxlint.py sweeps the
+        # same invariant over all 11 rules.
+        findings = check_shape(
+            Graph(f"sharded/{name}", None, self._compiled_text(name)),
+            forbidden_dims={8192, 4096, 2048, 8192 + 4096},
+            require_dims={8192 // 8, 4096 // 8})
+        assert not findings, "\n".join(f.render() for f in findings)
 
     def test_single_device_path_does_hold_full_width(self):
         """Detector sanity: without sharded=, the full width appears."""
@@ -279,7 +280,9 @@ class TestNoFullCoordinateDim:
                 for k, s in self.SHAPES.items()}
         txt = jax.jit(lambda t: aggregate_tree(t, cfg)).lower(
             args).compile().as_text()
-        assert 8192 in shape_dims(txt)
+        findings = check_shape(Graph("unsharded/flag", None, txt),
+                               forbidden_dims={8192})
+        assert findings, "SHAPE rule missed the full width on one device"
 
 
 @needs_mesh

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""jaxlint: sweep the repo's public entry points through repro.analysis.
+
+Lints every entry point in :mod:`repro.analysis.entrypoints` — all 11
+aggregation rules x {plain, masked, sketch} (x sharded with >= 8
+devices), the gram solver, the compressed bridges, the bf16 serve path,
+the train step, and the recompile harness — and exits nonzero on any
+finding.  This is the gating check of the CI ``lint-contracts`` lane.
+
+Usage:
+  PYTHONPATH=src python tools/jaxlint.py [options]
+
+Options:
+  --sharded {auto,force,skip}   mesh variants (default auto: run iff >= 8
+                                devices; the script forces an 8-device
+                                host platform when none is configured)
+  --only SUBSTR [SUBSTR ...]    lint only entries whose name contains any
+  --list                        print the entry-point names and exit
+  -q / --quiet                  findings only, no per-entry progress
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# Sharded variants need devices; force a host platform before jax loads
+# (mirrors the tests' subprocess pattern) unless the caller configured one.
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sharded", choices=("auto", "force", "skip"),
+                    default="auto")
+    ap.add_argument("--only", nargs="+", default=None, metavar="SUBSTR")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.entrypoints import run_sweep, sweep_entries
+
+    if args.list:
+        for e in sweep_entries(sharded=args.sharded):
+            print(e.name)
+        return 0
+
+    progress = None
+    if not args.quiet:
+        progress = lambda name: print(f"lint {name}", flush=True)
+    report = run_sweep(sharded=args.sharded, names=args.only,
+                       progress=progress)
+    print()
+    print(report.render())
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

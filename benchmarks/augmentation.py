@@ -7,7 +7,7 @@ distance-threshold aggregators.
 
 from __future__ import annotations
 
-from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
+from benchmarks.common import ByzRunConfig, emit, run_byzantine_training
 
 
 def run(steps: int = 100):

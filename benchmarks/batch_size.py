@@ -6,7 +6,7 @@ significantly better accuracy than the other robust aggregators.
 
 from __future__ import annotations
 
-from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
+from benchmarks.common import ByzRunConfig, emit, run_byzantine_training
 
 
 def run(steps: int = 100, batches=(16, 32, 64, 128),

@@ -40,9 +40,9 @@ import sys
 import time
 from pathlib import Path
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.flag import FlagConfig
 from repro.core.gram import fa_weights_from_gram

@@ -8,7 +8,7 @@ off this table.
 
 from __future__ import annotations
 
-from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
+from benchmarks.common import ByzRunConfig, emit, run_byzantine_training
 
 AGGS = ["mean", "trimmed_mean", "median", "meamed", "phocas",
         "multi_krum", "bulyan", "flag"]

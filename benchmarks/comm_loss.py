@@ -18,7 +18,7 @@ under ``more_workers/`` so older EXPERIMENTS tables keep regenerating.
 
 from __future__ import annotations
 
-from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
+from benchmarks.common import ByzRunConfig, emit, run_byzantine_training
 
 CODECS = (
     ("none", {}),          # dense fp32 reference

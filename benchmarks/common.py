@@ -26,8 +26,8 @@ import jax.numpy as jnp
 from repro.comm import CommConfig, dense_bits, get_codec, init_ef
 from repro.core import FlagConfig, aggregators
 from repro.core.attacks import apply_attack
-from repro.data.synthetic import SyntheticImages
 from repro.data import augment as augment_lib
+from repro.data.synthetic import SyntheticImages
 from repro.dist.aggregation import AggregatorConfig, compressed_aggregate
 
 RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")

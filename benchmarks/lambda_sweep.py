@@ -8,14 +8,14 @@ and Multi-Krum's on identical gradients (Fig. 11's metric).
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from benchmarks.common import (ByzRunConfig, _flatten, cnn_init, cnn_loss,
+                               emit, run_byzantine_training)
 from repro.core import FlagConfig, aggregators
 from repro.core.attacks import apply_attack
-from benchmarks.common import (ByzRunConfig, run_byzantine_training, emit,
-                               cnn_init, cnn_loss, _flatten)
 from repro.data.synthetic import SyntheticImages
 
 

@@ -3,7 +3,7 @@ the PCA top-m baseline, p=15, f=2."""
 
 from __future__ import annotations
 
-from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
+from benchmarks.common import ByzRunConfig, emit, run_byzantine_training
 
 
 def run(steps: int = 100):

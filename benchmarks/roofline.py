@@ -10,7 +10,7 @@ numbers are already per-device — SPMD modules have per-device shapes — so
 we divide by single-chip peaks, which is the same quantity.)
 
 FLOPs and HBM bytes are the **loop-corrected** values from
-benchmarks/hlo_stats.parse_cost (XLA's cost_analysis counts while bodies
+repro.analysis.hlo.parse_cost (XLA's cost_analysis counts while bodies
 once — both raw and corrected are recorded for transparency).  MODEL_FLOPS
 uses the standard 6*N*D (train) / 2*N*D (inference forward) with N =
 active params (MoE counts top-k + shared).

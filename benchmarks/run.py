@@ -12,9 +12,9 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (byzantine_tolerance, batch_size, comm_loss,
-                        augmentation, lambda_sweep, membership_churn,
-                        wallclock, other_attacks, scalability)
+from benchmarks import (augmentation, batch_size, byzantine_tolerance,
+                        comm_loss, lambda_sweep, membership_churn,
+                        other_attacks, scalability, wallclock)
 
 SUITES = {
     "byzantine_tolerance": lambda q: byzantine_tolerance.run(

@@ -6,7 +6,7 @@ the aggregation-call cost at p=60 (q = 60 + 1770 pairwise columns)."""
 
 from __future__ import annotations
 
-from benchmarks.common import ByzRunConfig, run_byzantine_training, emit
+from benchmarks.common import ByzRunConfig, emit, run_byzantine_training
 
 
 def run(steps: int = 60):

@@ -43,16 +43,15 @@ if __package__ in (None, ""):
     # sys.path; the sibling imports below need the repo root.
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-import numpy as np
 import jax
 import jax.numpy as jnp
-
-from repro.core.flag import FlagConfig
-from repro.dist.aggregation import AggregatorConfig, aggregate_tree
-from repro.launch.mesh import make_host_mesh
+import numpy as np
 
 from benchmarks.bench_aggregator import (BENCH_JSON, calibration_us,
                                          time_call, write_bench_json)
+from repro.core.flag import FlagConfig
+from repro.dist.aggregation import AggregatorConfig, aggregate_tree
+from repro.launch.mesh import make_host_mesh
 
 
 def _worker_tree(rng, p: int, n: int, leaves: int = 6):

@@ -13,14 +13,14 @@ both in the CSV/``results/bench`` emit and in the shared
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import FlagConfig, aggregators
-from benchmarks.common import emit
 from benchmarks.bench_aggregator import (calibration_us, time_call,
                                          write_bench_json)
+from benchmarks.common import emit
+from repro.core import FlagConfig, aggregators
 
 
 def run(p: int = 15, ns=(10_000, 100_000, 1_000_000)):

@@ -15,9 +15,9 @@ import jax.numpy as jnp
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from repro.data.synthetic import SyntheticImages
+from benchmarks.common import _flatten, cnn_init, cnn_loss
 from repro.data import augment
-from benchmarks.common import cnn_init, cnn_loss, _flatten
+from repro.data.synthetic import SyntheticImages
 
 task = SyntheticImages(seed=0)
 x, y = task.sample(jax.random.PRNGKey(0), 64)

@@ -23,15 +23,15 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import save_checkpoint
 from repro.comm import CODECS, CommConfig, init_ef
 from repro.configs import get_config, reduce_for_smoke
 from repro.core.flag import FlagConfig
-from repro.data.synthetic import SyntheticLM
 from repro.data.pipeline import WorkerDataConfig, lm_worker_batches
+from repro.data.synthetic import SyntheticLM
 from repro.dist.aggregation import AggregatorConfig
 from repro.dist.train_step import TrainConfig, build_train_step, init_train_state
 from repro.optim import adamw, warmup_cosine
-from repro.checkpoint import save_checkpoint
 
 
 def main():

@@ -3,10 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import FlagConfig, flag_aggregate_gram, aggregators
+from repro.core import FlagConfig, aggregators, flag_aggregate_gram
 
 rng = np.random.default_rng(0)
 n, p, f = 10_000, 15, 3

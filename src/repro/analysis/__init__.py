@@ -10,6 +10,10 @@ enforced implementation of those invariants (docs/static_analysis.md):
   trip-count-corrected cost + collective parsing);
 * :mod:`repro.analysis.rules` — the rule families (SHAPE, PRECISION,
   TRANSFER, MASK, COLLECTIVES) over captured :class:`Graph` objects;
+* :mod:`repro.analysis.pallas_extract` / :mod:`repro.analysis.
+  pallas_rules` — the kernel-level families (KTILING, KRACE, KVMEM,
+  KPRECISION, KSENTINEL) that open every ``pallas_call`` box: grid /
+  BlockSpec / index-map recovery plus kernel-body dataflow;
 * :mod:`repro.analysis.recompile` — the RECOMPILE runtime harness
   (``cache_size``, the generalized ``_cache_size() == 1``);
 * :mod:`repro.analysis.contract` — the ``@contract`` entry-point
@@ -25,6 +29,13 @@ from repro.analysis.findings import (ContractViolation, Finding, Report,
                                      format_findings)
 from repro.analysis.hlo import (CollectiveStats, HloCost, parse_collectives,
                                 parse_cost, shape_dims)
+from repro.analysis.pallas_extract import Block, PallasSite, find_pallas_calls
+from repro.analysis.pallas_rules import (VMEM_BUDGET_BYTES,
+                                         check_kernel_precision,
+                                         check_kernel_race,
+                                         check_kernel_sentinel,
+                                         check_kernel_tiling,
+                                         check_kernel_vmem, check_kernels)
 from repro.analysis.recompile import (assert_no_recompile, cache_size,
                                       check_recompile)
 from repro.analysis.rules import (RULES, Graph, capture, check_collectives,
@@ -32,10 +43,13 @@ from repro.analysis.rules import (RULES, Graph, capture, check_collectives,
                                   check_transfer, full_width_dims)
 
 __all__ = [
-    "CollectiveStats", "ContractViolation", "Finding", "Graph", "HloCost",
-    "RULES", "Report", "assert_no_recompile", "cache_size", "capture",
-    "check_collectives", "check_mask", "check_precision", "check_recompile",
-    "check_shape", "check_transfer", "checking", "contract",
-    "contracts_enabled", "enable_contracts", "format_findings",
+    "Block", "CollectiveStats", "ContractViolation", "Finding", "Graph",
+    "HloCost", "PallasSite", "RULES", "Report", "VMEM_BUDGET_BYTES",
+    "assert_no_recompile", "cache_size", "capture", "check_collectives",
+    "check_kernel_precision", "check_kernel_race", "check_kernel_sentinel",
+    "check_kernel_tiling", "check_kernel_vmem", "check_kernels",
+    "check_mask", "check_precision", "check_recompile", "check_shape",
+    "check_transfer", "checking", "contract", "contracts_enabled",
+    "enable_contracts", "find_pallas_calls", "format_findings",
     "full_width_dims", "parse_collectives", "parse_cost", "shape_dims",
 ]

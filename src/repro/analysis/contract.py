@@ -44,6 +44,17 @@ Declared invariants:
 * ``mask_traced`` — MASK, active only when the call carries a non-None
   ``mask=``: the mask must be consumable as a traced operand and
   actually used.
+* ``kernel_race`` — KTILING + KRACE over every ``pallas_call`` in the
+  traced graph: tiles cover, stay in-bounds, and never overlap across
+  grid steps; revisited output blocks follow the guarded-accumulation
+  idiom.  Vacuously true when the graph lowers without Pallas (the CPU
+  ``impl="pallas"`` fallback emits plain XLA) — the sweep entries trace
+  the interpret-mode kernels explicitly so the rules always see real
+  sites.
+* ``kernel_budget`` — KVMEM: per-grid-step VMEM working set of every
+  ``pallas_call`` vs this byte budget (``True`` for the default
+  :data:`repro.analysis.pallas_rules.VMEM_BUDGET_BYTES`), plus
+  lane/sublane block alignment.
 """
 
 from __future__ import annotations
@@ -148,7 +159,8 @@ def _check_full_width(fn, name, args, kwargs) -> list[Finding]:
 
 def contract(*, max_dim=None, no_full_width: bool = False,
              fp32_contractions: bool = False,
-             no_host_transfers: bool = False, mask_traced: bool = False):
+             no_host_transfers: bool = False, mask_traced: bool = False,
+             kernel_race: bool = False, kernel_budget=None):
     """Declare graph invariants on an entry point (see module docstring)."""
 
     def deco(fn):
@@ -157,7 +169,9 @@ def contract(*, max_dim=None, no_full_width: bool = False,
 
         def run_checks(args, kwargs):
             findings: list[Finding] = []
-            if max_dim is not None or fp32_contractions or no_host_transfers:
+            if (max_dim is not None or fp32_contractions
+                    or no_host_transfers or kernel_race
+                    or kernel_budget is not None):
                 graph = capture(fn, *args, name=name, compile=False,
                                 **kwargs)
                 if max_dim is not None:
@@ -169,6 +183,21 @@ def contract(*, max_dim=None, no_full_width: bool = False,
                     findings += check_precision(graph)
                 if no_host_transfers:
                     findings += check_transfer(graph)
+                if kernel_race or kernel_budget is not None:
+                    from repro.analysis.pallas_rules import (
+                        VMEM_BUDGET_BYTES, check_kernel_race,
+                        check_kernel_tiling, check_kernel_vmem, sites_of)
+
+                    sites = sites_of(graph)
+                    if kernel_race:
+                        findings += check_kernel_tiling(sites, name=name)
+                        findings += check_kernel_race(sites, name=name)
+                    if kernel_budget is not None:
+                        budget = (VMEM_BUDGET_BYTES
+                                  if kernel_budget is True
+                                  else float(kernel_budget))
+                        findings += check_kernel_vmem(
+                            sites, max_bytes=budget, name=name)
             if mask_traced and kwargs.get("mask") is not None:
                 mask = kwargs["mask"]
                 rest = {k: v for k, v in kwargs.items() if k != "mask"}
@@ -193,7 +222,8 @@ def contract(*, max_dim=None, no_full_width: bool = False,
             "max_dim": max_dim, "no_full_width": no_full_width,
             "fp32_contractions": fp32_contractions,
             "no_host_transfers": no_host_transfers,
-            "mask_traced": mask_traced}
+            "mask_traced": mask_traced, "kernel_race": kernel_race,
+            "kernel_budget": kernel_budget}
         wrapper.__wrapped__ = fn
         return wrapper
 

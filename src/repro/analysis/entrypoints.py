@@ -21,6 +21,16 @@ are lint-clean" acceptance test (``tests/test_analysis.py``) all consume
   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — per-device
   SHAPE no-full-width + COLLECTIVES byte budget + PRECISION + TRANSFER
   on the compiled, partitioned HLO for all 11 rules.
+* **kernel entries** — every production ``pallas_call`` site (gram:
+  per-matrix / fused-tree / sketch-stride; coord_stats: plain, the
+  meamed key-value sort path, masked, Krum, Bulyan; flash_attn: bf16
+  prefill + decode; weighted_sum; plus the full ``aggregate_tree``
+  graph at ``impl='pallas_interpret'``, and its sharded twin in the
+  mesh block) — linted with the five K-rule families (KTILING / KRACE /
+  KVMEM / KPRECISION / KSENTINEL) via
+  :func:`repro.analysis.pallas_rules.check_kernels`.  Each entry pins
+  the expected site count so the sweep can never pass vacuously on a
+  graph that lowered without Pallas.
 """
 
 from __future__ import annotations
@@ -28,9 +38,9 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis.findings import Report
 from repro.analysis.recompile import check_recompile
@@ -264,6 +274,116 @@ def _recompile_entries():
             Entry("recompile/serve_step", run_serve)]
 
 
+def _kernel_entries():
+    """The K-rule block: one entry per production kernel configuration.
+
+    Kernels are traced with ``interpret=True`` (or
+    ``impl='pallas_interpret'``) so the ``pallas_call`` primitive is
+    present in the jaxpr on every backend — the CPU ``impl='pallas'``
+    dispatch deliberately lowers to plain XLA, which would leave the
+    K-rules nothing to look at.  ``n_sites`` pins the expected site
+    count (detector sanity).
+    """
+    from repro.analysis.pallas_rules import check_kernels
+
+    def _ck(fn, *args, n_sites: int, mask_inputs=None, name: str = ""):
+        jaxpr = jax.make_jaxpr(fn)(*args)
+        return check_kernels(jaxpr, name=name, expect_sites=n_sites,
+                             mask_inputs=mask_inputs)
+
+    def _gm(seed=0, n=4096, p=15, dtype=jnp.float32):
+        rng = np.random.default_rng(seed)
+        return jnp.asarray(rng.normal(size=(n, p)), dtype)
+
+    def run_gram():
+        from repro.kernels.gram.kernel import gram_pallas
+        return _ck(lambda g: gram_pallas(g, block_n=1024, interpret=True),
+                   _gm(), n_sites=1, name="gram_pallas")
+
+    def run_tree_gram(stride=1):
+        from repro.kernels.gram.kernel import tree_gram_pallas
+        X = jnp.asarray(
+            np.random.default_rng(1).normal(size=(W, 5000)), jnp.float32)
+        return _ck(lambda x: tree_gram_pallas(
+            x, sketch_stride=stride, block_n=1024, interpret=True),
+            X, n_sites=1, name=f"tree_gram_pallas[stride={stride}]")
+
+    def run_coord(op, masked=False):
+        from repro.kernels.coord_stats.kernel import coord_stats_pallas
+        Gw = jnp.asarray(
+            np.random.default_rng(2).normal(size=(15, 5000)), jnp.float32)
+        if masked:
+            mask = jnp.asarray(np.r_[np.ones(12), np.zeros(3)], jnp.float32)
+            return _ck(lambda g, m: coord_stats_pallas(
+                g, m, op=op, f=3, interpret=True), Gw, mask,
+                n_sites=1, mask_inputs=(1,),
+                name=f"coord_stats[{op},masked]")
+        return _ck(lambda g: coord_stats_pallas(
+            g, op=op, f=3, interpret=True), Gw,
+            n_sites=1, name=f"coord_stats[{op}]")
+
+    def run_krum():
+        from repro.kernels.coord_stats.kernel import krum_scores_pallas
+        D2 = jnp.asarray(
+            np.random.default_rng(3).normal(size=(15, 15))**2, jnp.float32)
+        return _ck(lambda d: krum_scores_pallas(d, f=3, interpret=True),
+                   D2, n_sites=1, name="krum_scores_pallas")
+
+    def run_bulyan():
+        from repro.kernels.coord_stats.kernel import bulyan_select_pallas
+        D2 = jnp.asarray(
+            np.random.default_rng(4).normal(size=(15, 15))**2, jnp.float32)
+        return _ck(lambda d: bulyan_select_pallas(d, f=3, interpret=True),
+                   D2, n_sites=1, name="bulyan_select_pallas")
+
+    def run_flash(decode=False):
+        from repro.kernels.flash_attn.kernel import flash_attn_pallas
+        rng = np.random.default_rng(5)
+        sq, sk = (1, 512) if decode else (256, 384)
+        q = jnp.asarray(rng.normal(size=(2, 2, sq, 64)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(2, 2, sk, 64)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(2, 2, sk, 64)), jnp.bfloat16)
+        return _ck(lambda q, k, v: flash_attn_pallas(
+            q, k, v, causal=not decode, interpret=True), q, k, v,
+            n_sites=1,
+            name=f"flash_attn[{'decode' if decode else 'prefill'},bf16]")
+
+    def run_wsum():
+        from repro.kernels.weighted_sum.kernel import weighted_sum_pallas
+        rng = np.random.default_rng(6)
+        G = jnp.asarray(rng.normal(size=(5000, W)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(W,)), jnp.float32)
+        return _ck(lambda g, cc: weighted_sum_pallas(g, cc, interpret=True),
+                   G, c, n_sites=1, name="weighted_sum_pallas")
+
+    def run_aggregate_interp():
+        import dataclasses
+        from repro.dist.aggregation import aggregate_tree
+        tree = _tree(8)
+        cfg = dataclasses.replace(_agg_cfg("flag"),
+                                  impl="pallas_interpret")
+        return _ck(lambda t: aggregate_tree(t, cfg), tree,
+                   # fused tree Gram + one weighted combine per leaf
+                   n_sites=3,
+                   name="aggregate_tree[flag,pallas_interpret]")
+
+    return [
+        Entry("kernels/gram/plain", run_gram),
+        Entry("kernels/gram/tree", lambda: run_tree_gram(1)),
+        Entry("kernels/gram/tree_sketch", lambda: run_tree_gram(4)),
+        Entry("kernels/coord_stats/median", lambda: run_coord("median")),
+        Entry("kernels/coord_stats/meamed_kv", lambda: run_coord("meamed")),
+        Entry("kernels/coord_stats/masked",
+              lambda: run_coord("median", masked=True)),
+        Entry("kernels/coord_stats/krum", run_krum),
+        Entry("kernels/coord_stats/bulyan", run_bulyan),
+        Entry("kernels/flash_attn/prefill_bf16", lambda: run_flash(False)),
+        Entry("kernels/flash_attn/decode_bf16", lambda: run_flash(True)),
+        Entry("kernels/weighted_sum/plain", run_wsum),
+        Entry("kernels/aggregate/flag_interpret", run_aggregate_interp),
+    ]
+
+
 def _sharded_entries():
     entries = []
     for name in SWEEP_RULES:
@@ -301,6 +421,25 @@ def _sharded_entries():
                     + check_precision(graph) + check_transfer(graph))
 
         entries.append(Entry(f"aggregate_tree/{name}/sharded", run))
+
+    def run_sharded_kernels():
+        import dataclasses
+        from repro.analysis.pallas_rules import check_kernels
+        from repro.dist.sharded import sharded_aggregate_tree
+        from repro.launch.mesh import make_host_mesh
+        tree = _tree(9)
+        mesh = make_host_mesh(8)
+        cfg = dataclasses.replace(_agg_cfg("flag"),
+                                  impl="pallas_interpret")
+        jaxpr = jax.make_jaxpr(
+            lambda t: sharded_aggregate_tree(t, cfg, mesh=mesh))(tree)
+        # shard-local fused Gram + one weighted combine per leaf, all
+        # inside the shard_map body
+        return check_kernels(jaxpr, expect_sites=3,
+                             name="sharded_aggregate_tree[flag,interp]")
+
+    entries.append(Entry("kernels/aggregate/sharded_interpret",
+                         run_sharded_kernels))
     return entries
 
 
@@ -314,7 +453,7 @@ def sweep_entries(*, sharded: str = "auto") -> list[Entry]:
     """
     entries = ([_gram_solver_entry()] + _aggregate_entries()
                + _compressed_entries() + _serve_entries() + [_train_entry()]
-               + _recompile_entries())
+               + _recompile_entries() + _kernel_entries())
     want_sharded = (sharded == "force"
                     or (sharded == "auto" and jax.device_count() >= 8))
     if want_sharded:

@@ -11,7 +11,7 @@ specific rule id shows up).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 
 
 @dataclass(frozen=True)
@@ -39,6 +39,10 @@ class Finding:
         return (f"[{self.rule}] {self.message}\n"
                 f"    op={self.op} computation={self.computation}\n"
                 f"    evidence: {ev}")
+
+    def to_dict(self) -> dict:
+        """JSON-ready mapping (the ``jaxlint --json`` payload unit)."""
+        return asdict(self)
 
 
 def format_findings(findings: list[Finding], *, header: str = "") -> str:
@@ -91,3 +95,16 @@ class Report:
         lines.append(f"-- {len(self.sections)} entry point(s), "
                      f"{len(self.findings)} finding(s) total")
         return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        """Machine-readable sweep result (``jaxlint --json`` / the CI
+        artifact): one object per entry point, findings as dicts."""
+        return {
+            "clean": self.clean,
+            "total_findings": len(self.findings),
+            "entries": [
+                {"entry": name, "clean": not fs,
+                 "findings": [f.to_dict() for f in fs]}
+                for name, fs in self.sections
+            ],
+        }

@@ -432,3 +432,13 @@ RULES = {
     # runtime family — see repro.analysis.recompile
     "recompile": None,
 }
+
+
+def _register_kernel_rules():
+    # Deferred: pallas_rules imports this module (iter_eqns, Graph).
+    from repro.analysis import pallas_rules as _pk
+
+    RULES.update(_pk.K_RULES)
+
+
+_register_kernel_rules()

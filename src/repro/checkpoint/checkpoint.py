@@ -36,9 +36,9 @@ import re
 import shutil
 import tempfile
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 FORMAT_VERSION = 2
 

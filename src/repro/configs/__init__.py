@@ -9,18 +9,17 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.models.config import ModelConfig, MoESettings
-
-from repro.configs.xlstm_1_3b import CONFIG as _xlstm
-from repro.configs.smollm_360m import CONFIG as _smollm
-from repro.configs.mixtral_8x7b import CONFIG as _mixtral
-from repro.configs.starcoder2_15b import CONFIG as _starcoder2
-from repro.configs.stablelm_1_6b import CONFIG as _stablelm
 from repro.configs.command_r_35b import CONFIG as _command_r
 from repro.configs.deepseek_moe_16b import CONFIG as _deepseek
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
 from repro.configs.musicgen_medium import CONFIG as _musicgen
-from repro.configs.recurrentgemma_9b import CONFIG as _recurrentgemma
 from repro.configs.phi3_vision_4_2b import CONFIG as _phi3v
+from repro.configs.recurrentgemma_9b import CONFIG as _recurrentgemma
+from repro.configs.smollm_360m import CONFIG as _smollm
+from repro.configs.stablelm_1_6b import CONFIG as _stablelm
+from repro.configs.starcoder2_15b import CONFIG as _starcoder2
+from repro.configs.xlstm_1_3b import CONFIG as _xlstm
+from repro.models.config import ModelConfig, MoESettings
 
 ARCHS: dict[str, ModelConfig] = {
     c.name: c for c in [

@@ -9,9 +9,9 @@ Public API:
   attacks.ATTACKS                 — Byzantine threat-model registry
 """
 
+from repro.core import aggregators, attacks, beta_mle
 from repro.core.flag import FlagConfig, default_m, flag_aggregate, flag_subspace
 from repro.core.gram import fa_weights_from_gram, flag_aggregate_gram, gram_matrix
-from repro.core import aggregators, attacks, beta_mle
 
 __all__ = [
     "FlagConfig", "default_m", "flag_aggregate", "flag_subspace",

@@ -26,13 +26,9 @@ from repro.core.gram import fa_weights_from_gram, gram_matrix
 # Single source for the coordinate-wise statistics: the kernel oracles in
 # kernels/coord_stats/ref.py (pure jnp, no Pallas import) ARE the
 # implementations here — see that module's docstring.
-from repro.kernels.coord_stats.ref import (
-    mean_around_ref,
-    meamed_ref,
-    median_ref,
-    phocas_ref,
-    trimmed_mean_ref,
-)
+from repro.kernels.coord_stats.ref import (meamed_ref, mean_around_ref,
+                                           median_ref, phocas_ref,
+                                           trimmed_mean_ref)
 
 __all__ = [
     "mean", "median", "trimmed_mean", "meamed", "phocas", "krum",
@@ -373,4 +369,6 @@ def get_aggregator(name: str) -> Callable:
     try:
         return AGGREGATORS[name]
     except KeyError:
-        raise KeyError(f"unknown aggregator {name!r}; have {sorted(AGGREGATORS)}")
+        raise KeyError(
+            f"unknown aggregator {name!r}; have {sorted(AGGREGATORS)}"
+        ) from None

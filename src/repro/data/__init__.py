@@ -1,9 +1,9 @@
 """Data substrate: deterministic synthetic tasks, nonlinear augmentations,
 and the sharded per-worker batch pipeline."""
 
+from repro.data import augment, pipeline
 from repro.data.synthetic import (SyntheticImages, SyntheticLM,
                                   make_image_task, make_lm_task)
-from repro.data import augment, pipeline
 
 __all__ = ["SyntheticImages", "SyntheticLM", "make_image_task",
            "make_lm_task", "augment", "pipeline"]

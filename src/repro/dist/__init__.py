@@ -31,12 +31,8 @@ the models):
   serve_step   — one-token greedy decode step + the batched decode loop
 """
 
-from repro.dist import sharding
-from repro.dist import membership
-from repro.dist import aggregation
-from repro.dist import sharded
-from repro.dist import train_step
-from repro.dist import serve_step
+from repro.dist import (aggregation, membership, serve_step, sharded,
+                        sharding, train_step)
 
 __all__ = ["sharding", "membership", "aggregation", "sharded", "train_step",
            "serve_step"]

@@ -61,11 +61,10 @@ from repro.comm.error_feedback import ef_encode_decode
 from repro.core import aggregators
 from repro.core.flag import FlagConfig
 from repro.core.gram import fa_weights_from_gram
-from repro.kernels.coord_stats.ops import bulyan_select as bulyan_select_op
-from repro.kernels.coord_stats.ops import coord_stat
-from repro.kernels.coord_stats.ops import krum_scores as krum_scores_op
-from repro.kernels.gram.ops import gram as gram_kernel
-from repro.kernels.gram.ops import tree_gram_fused
+from repro.kernels.coord_stats.ops import (bulyan_select as bulyan_select_op,
+                                           coord_stat,
+                                           krum_scores as krum_scores_op)
+from repro.kernels.gram.ops import gram as gram_kernel, tree_gram_fused
 from repro.kernels.weighted_sum.ops import weighted_sum as weighted_sum_kernel
 
 __all__ = ["AggregatorConfig", "tree_gram", "tree_combine", "aggregate_tree",
@@ -279,7 +278,7 @@ COORDWISE_RULES = frozenset({"median", "trimmed_mean", "meamed", "phocas"})
 
 
 @contract(fp32_contractions=True, no_host_transfers=True, mask_traced=True,
-          no_full_width=True)
+          no_full_width=True, kernel_race=True, kernel_budget=True)
 def aggregate_tree(tree, cfg: AggregatorConfig, *, gram=None, mask=None,
                    sharded=None):
     """Aggregate a worker-major gradient pytree.

@@ -35,8 +35,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import NamedTuple
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = ["FaultEvent", "FaultSchedule", "Membership", "membership_at",
            "active_mask", "FAULTS", "get_fault_schedule"]

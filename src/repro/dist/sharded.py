@@ -210,7 +210,7 @@ def sharded_tree_combine(tree, c: jnp.ndarray, mesh: Mesh, *,
 
 
 @contract(fp32_contractions=True, no_host_transfers=True, mask_traced=True,
-          no_full_width=True)
+          no_full_width=True, kernel_race=True, kernel_budget=True)
 def sharded_aggregate_tree(tree, cfg, *, mesh: Mesh, gram=None, mask=None):
     """Mesh-sharded :func:`repro.dist.aggregation.aggregate_tree`.
 

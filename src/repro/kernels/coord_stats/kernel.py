@@ -277,9 +277,12 @@ def _make_krum_kernel(p: int, f: int):
         x = d_ref[...]                                   # (pr, pc) fp32
         rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
         cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-        # self-distances and padding sort to the top, never into the k sum
+        # Self-distances and padding sort to the top, never into the k sum
+        # (k <= p - 3 < p - 1 real entries per column).  Finite sentinel,
+        # not inf: the sorting network's max/min compares stay NaN-free
+        # and KSENTINEL holds.
         x = jnp.where((rows == cols) | (rows >= p) | (cols >= p),
-                      jnp.inf, x)
+                      _SENTINEL, x)
         s = _sort_rows(x)
         out_ref[...] = jnp.sum(jnp.where(rows < k, s, 0.0),
                                axis=0)[None, :]
@@ -329,10 +332,14 @@ def _make_bulyan_kernel(p: int, f: int):
         def body(r, carry):
             avail_r, avail_c, order = carry
             pair = avail_r & avail_c                     # (pr, pc)
-            x = jnp.where(valid, jnp.where(pair, x0, big), jnp.inf)
+            # Finite sentinel (not inf) in both spots: invalid entries
+            # never reach the first-k sum of a real column (p - 1 finite
+            # entries >= k there), and unavailable columns only need to
+            # lose every argmin against finite real scores.
+            x = jnp.where(valid, jnp.where(pair, x0, big), _SENTINEL)
             s = _sort_rows(x)
             sc = jnp.sum(jnp.where(rows < k, s, 0.0), axis=0)[None, :]
-            sc = jnp.where(avail_c, sc, jnp.inf)
+            sc = jnp.where(avail_c, sc, _SENTINEL)
             pick = jnp.argmin(sc[0]).astype(jnp.int32)
             order = jnp.where(col_id == pick, r, order)
             return (avail_r & (row_id != pick),

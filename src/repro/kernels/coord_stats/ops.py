@@ -18,14 +18,14 @@ recompile on any path.
 
 from __future__ import annotations
 
-from repro.kernels.gram.ops import on_tpu
+from repro.kernels.coord_stats import ref
 from repro.kernels.coord_stats.kernel import (
     bulyan_select_pallas,
     coord_stats_pallas,
     krum_scores_pallas,
 )
 from repro.kernels.coord_stats.net import coord_stats_net
-from repro.kernels.coord_stats import ref
+from repro.kernels.gram.ops import on_tpu
 
 _REFS = {
     "median": lambda Gw, f: ref.median_ref(Gw),

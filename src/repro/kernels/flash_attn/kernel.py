@@ -117,10 +117,13 @@ def flash_attn_pallas(q, k, v, *, causal: bool = True,
             pl.BlockSpec((1, block_q, 1), lambda bh, i, j: (bh, i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b * h, sq_pad, d), q.dtype),
+            # The o block is a cross-step accumulator (the k axis revisits
+            # it): it must be fp32 even for bf16 inputs, else every store
+            # rounds the running sum (KPRECISION).  Cast once on the way out.
+            jax.ShapeDtypeStruct((b * h, sq_pad, d), jnp.float32),
             jax.ShapeDtypeStruct((b * h, sq_pad, 1), jnp.float32),
             jax.ShapeDtypeStruct((b * h, sq_pad, 1), jnp.float32),
         ],
         interpret=interpret,
     )(qp, kp, vp)
-    return o[:, :sq, :].reshape(b, h, sq, d)
+    return o[:, :sq, :].reshape(b, h, sq, d).astype(q.dtype)

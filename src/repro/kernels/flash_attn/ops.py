@@ -2,9 +2,9 @@
 
 from __future__ import annotations
 
-from repro.kernels.gram.ops import on_tpu
 from repro.kernels.flash_attn.kernel import flash_attn_pallas
 from repro.kernels.flash_attn.ref import flash_attn_ref
+from repro.kernels.gram.ops import on_tpu
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, scale=None,

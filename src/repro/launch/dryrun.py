@@ -37,17 +37,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import make_production_mesh, worker_count
 from repro.configs import ARCHS, get_config
 from repro.configs.shapes import SHAPES, input_specs
 from repro.core.flag import FlagConfig
-from repro.dist.sharding import use_sharding
-from repro.dist.aggregation import AggregatorConfig
-from repro.dist.train_step import TrainConfig, build_train_step
 from repro.dist import serve_step as serve_lib
+from repro.dist.aggregation import AggregatorConfig
+from repro.dist.sharding import use_sharding
+from repro.dist.train_step import TrainConfig, build_train_step
+from repro.launch.mesh import make_production_mesh, worker_count
 from repro.models import transformer
 from repro.models.config import ModelConfig
-from repro.optim import sgd, constant
+from repro.optim import constant, sgd
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
 

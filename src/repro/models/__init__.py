@@ -1,7 +1,7 @@
 """Model substrate: composable transformer covering all assigned archetypes
 (dense GQA, MoE, xLSTM, RG-LRU hybrid, audio/VLM decoder backbones)."""
 
-from repro.models.config import ModelConfig, MoESettings
 from repro.models import transformer
+from repro.models.config import ModelConfig, MoESettings
 
 __all__ = ["ModelConfig", "MoESettings", "transformer"]

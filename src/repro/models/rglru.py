@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.dist.sharding import shard
 from repro.models import layers
 from repro.models.config import ModelConfig
-from repro.models.ssm import conv_init, conv_apply
+from repro.models.ssm import conv_apply, conv_init
 
 _C = 8.0
 

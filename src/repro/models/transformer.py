@@ -31,8 +31,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import shard
-from repro.models import attention, layers, moe as moe_lib, mlp as mlp_lib
-from repro.models import rglru as rglru_lib, ssm
+from repro.models import (attention, layers, mlp as mlp_lib, moe as moe_lib,
+                          rglru as rglru_lib, ssm)
 from repro.models.config import ModelConfig
 
 
@@ -313,7 +313,7 @@ def apply_stack(params, x, cfg: ModelConfig, *, positions, caches=None,
             # unrolled (dry-run roofline mode): identical math, O(L) HLO
             ys = []
             for i in range(n_periods):
-                xi = jax.tree.map(lambda t: t[i], xs)
+                xi = jax.tree.map(lambda t, i=i: t[i], xs)
                 x, y = body_fn(x, xi)
                 ys.append(y)
             body_caches = (jax.tree.map(lambda *ts: jnp.stack(ts),

@@ -1,8 +1,8 @@
 """Optimizers + schedules (built natively; the paper trains with SGD)."""
 
-from repro.optim.optimizers import (sgd, adamw, Optimizer, init_opt_state,
-                                    apply_updates)
-from repro.optim.schedules import step_decay, cosine, constant, warmup_cosine
+from repro.optim.optimizers import (Optimizer, adamw, apply_updates,
+                                    init_opt_state, sgd)
+from repro.optim.schedules import constant, cosine, step_decay, warmup_cosine
 
 __all__ = ["sgd", "adamw", "Optimizer", "init_opt_state", "apply_updates",
            "step_decay", "cosine", "constant", "warmup_cosine"]

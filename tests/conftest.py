@@ -25,9 +25,23 @@ def _drop_compile_caches():
     assertions (``cache_size``) are intra-module and unaffected.
     """
     yield
+    import sys
+
     import jax
 
     jax.clear_caches()
+    # jax.clear_caches() drops jit executables but not the Pallas
+    # lowering/interpreter memo tables (module-level lru_caches inside
+    # jax._src.pallas.*).  The kernel-sweep modules added in the K-rule
+    # PR trace hundreds of pallas_calls; clear those too so the
+    # accumulated XLA:CPU state stays bounded.
+    for mod_name, mod in list(sys.modules.items()):
+        if not mod_name.startswith("jax._src.pallas"):
+            continue
+        for attr_name in dir(mod):
+            attr = getattr(mod, attr_name, None)
+            if callable(getattr(attr, "cache_clear", None)):
+                attr.cache_clear()
 
 
 @pytest.fixture(scope="session")

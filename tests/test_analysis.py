@@ -11,9 +11,9 @@ for the ``src/repro/models`` fixes this PR shipped, and the end-to-end
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 import repro.analysis as A
@@ -375,6 +375,313 @@ class TestModelPrecisionFixtures:
 
 
 # ---------------------------------------------------------------------------
+# kernel rules (KTILING / KRACE / KVMEM / KPRECISION / KSENTINEL):
+# deliberately-broken mutant kernels as true-positive fixtures
+# ---------------------------------------------------------------------------
+
+def _mutant_jaxpr(kernel, *, grid, in_specs, out_specs, out_shape,
+                  in_shapes=((32, 128),), in_dtype=jnp.float32,
+                  **pallas_kwargs):
+    """Trace (never run) a pallas_call mutant into a lintable jaxpr."""
+    from jax.experimental import pallas as pl
+
+    args = [jnp.zeros(s, in_dtype) for s in in_shapes]
+    fn = pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
+                        out_specs=out_specs, out_shape=out_shape,
+                        interpret=True, **pallas_kwargs)
+    return jax.make_jaxpr(fn)(*args)
+
+
+def _only_finding(jaxpr, rule: str, op: str, **kwargs):
+    """Assert the full K-rule battery fires *exactly* the expected
+    finding (and nothing else) — mutants must be surgical."""
+    from repro.analysis.pallas_rules import check_kernels
+
+    findings = check_kernels(jaxpr, **kwargs)
+    assert len(findings) == 1, "\n".join(f.render() for f in findings)
+    assert findings[0].rule == rule and findings[0].op == op, \
+        findings[0].render()
+    return findings[0]
+
+
+class TestKernelMutants:
+    def test_race_unconditional_overwrite(self):
+        """A revisited output block clobbered by a value independent of
+        the ref: later grid steps erase earlier ones."""
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2.0     # no accumulate, no guard
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(4,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32))
+        f = _only_finding(jx, "krace", "unguarded-overwrite")
+        assert "revisits" in f.message
+
+    def test_oob_tile(self):
+        """Index map walks past the padded operand."""
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(2,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i + 1, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((16, 128), jnp.float32),
+            in_shapes=((16, 128),))
+        f = _only_finding(jx, "ktiling", "oob-block")
+        assert "overruns" in f.message
+
+    def test_overlapping_tiles(self):
+        """Two distinct grid steps write the same output block along a
+        *dependent* axis — overlap, not accumulation."""
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(4,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (i // 2, 0)),
+            out_shape=jax.ShapeDtypeStruct((16, 128), jnp.float32))
+        f = _only_finding(jx, "ktiling", "overlapping-tiles")
+        assert "2 distinct grid indices" in f.message
+
+    def test_uncovered_output_block(self):
+        """Grid never visits part of the output: uninitialized memory."""
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(2,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+            in_shapes=((32, 128),))
+        _only_finding(jx, "ktiling", "uncovered-block")
+
+    def test_bf16_accumulator(self):
+        """A correctly-guarded accumulator that is bf16: every store
+        rounds the running sum."""
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            i = pl.program_id(0)
+
+            @pl.when(i == 0)
+            def _init():
+                o_ref[...] = jnp.zeros_like(o_ref)
+
+            o_ref[...] += x_ref[...]
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(4,),
+            in_specs=[pl.BlockSpec((16, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((16, 128), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((16, 128), jnp.bfloat16),
+            in_shapes=((64, 128),), in_dtype=jnp.bfloat16)
+        f = _only_finding(jx, "kprecision", "low-precision-accumulator")
+        assert "bfloat16" in f.message
+
+    def test_infinite_sentinel(self):
+        """Masking with -inf instead of a finite sentinel."""
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            x = x_ref[...]
+            rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+            o_ref[...] = jnp.where(rows < 4, x, -jnp.inf)
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(1,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+            in_shapes=((8, 128),))
+        f = _only_finding(jx, "ksentinel", "nonfinite-sentinel")
+        assert "-inf" in f.message
+
+    def test_vmem_blowout(self):
+        """Per-grid-step working set (double-buffered) over the budget."""
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(2,),
+            in_specs=[pl.BlockSpec((1024, 2048), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((1024, 2048), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((2048, 2048), jnp.float32),
+            in_shapes=((2048, 2048),))
+        f = _only_finding(jx, "kvmem", "working-set")
+        assert "exceeds the budget" in f.message
+        # the same site passes with a budget that actually fits it
+        from repro.analysis.pallas_rules import check_kernel_vmem
+        assert check_kernel_vmem(jx, max_bytes=64 * 2**20) == []
+
+    def test_misaligned_block(self):
+        """A lane-dim block width that is neither 128-aligned nor the
+        full array dim silently inflates every tile."""
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(2,),
+            in_specs=[pl.BlockSpec((8, 100), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 100), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((16, 200), jnp.float32),
+            in_shapes=((16, 200),))
+        from repro.analysis.pallas_rules import check_kernel_vmem
+        findings = check_kernel_vmem(jx)
+        assert findings and all(f.op == "misaligned-block"
+                                for f in findings)
+
+    def test_input_write_without_alias(self):
+        """Writing an input ref with no declared input_output_alias."""
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+            x_ref[...] = o_ref[...] * 0.0
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(1,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+            in_shapes=((8, 128),))
+        f = _only_finding(jx, "krace", "input-write")
+        assert "input_output_alias" in f.message
+
+    def test_missing_guarded_init(self):
+        """Reading a revisited accumulator with no first-visit init: the
+        first grid step consumes uninitialized VMEM."""
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] += x_ref[...]          # accumulate, but never init
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(4,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32))
+        f = _only_finding(jx, "krace", "missing-init")
+        assert "uninitialized" in f.message
+
+    def test_unread_mask_operand(self):
+        """A membership mask that is accepted but never consumed."""
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, m_ref, o_ref):
+            o_ref[...] = x_ref[...]           # m_ref ignored
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(1,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0)),
+                      pl.BlockSpec((8, 1), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+            in_shapes=((8, 128), (8, 1)))
+        f = _only_finding(jx, "ksentinel", "mask-unread",
+                          mask_inputs=(1,))
+        assert "never read" in f.message
+
+
+class TestKernelRuleNegatives:
+    """The guarded-accumulation idiom and friends must lint clean."""
+
+    def test_guarded_accumulator_is_clean(self):
+        from jax.experimental import pallas as pl
+        from repro.analysis.pallas_rules import check_kernels
+
+        def kernel(x_ref, o_ref):
+            i = pl.program_id(0)
+
+            @pl.when(i == 0)
+            def _init():
+                o_ref[...] = jnp.zeros_like(o_ref)
+
+            o_ref[...] += x_ref[...]
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(4,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32))
+        assert check_kernels(jx, expect_sites=1) == []
+
+    def test_site_count_mismatch_is_a_finding(self):
+        """Detector sanity: promising N kernels over a kernel-free graph
+        must fail, not vacuously pass."""
+        from repro.analysis.pallas_rules import check_kernels
+
+        jx = jax.make_jaxpr(lambda a: a @ a.T)(jnp.ones((4, 8)))
+        findings = check_kernels(jx, expect_sites=1, name="phantom")
+        assert len(findings) == 1 and findings[0].op == "<site-count>"
+
+    def test_extraction_recovers_structure(self):
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        jx = _mutant_jaxpr(
+            kernel, grid=(2, 3),
+            in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((16, 384), jnp.float32),
+            in_shapes=((16, 384),))
+        (site,) = A.find_pallas_calls(jx)
+        assert site.grid == (2, 3)
+        (out,) = site.outputs
+        assert out.block_shape == (8, 128)
+        assert out.array_shape == (16, 384)
+        assert site.revisit_axes(out) == set()
+        assert site.dependent_axes(out) == {0, 1}
+        assert len(site.visits(out)) == 6
+
+    def test_contract_kernel_options(self):
+        """kernel_race/kernel_budget on @contract fire through the
+        decorator (and stay silent on a clean graph)."""
+        from jax.experimental import pallas as pl
+
+        def bad_kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2.0
+
+        def make_entry(**copts):
+            @A.contract(**copts)
+            def entry(x):
+                return pl.pallas_call(
+                    bad_kernel, grid=(4,),
+                    in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+                    out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+                    out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+                    interpret=True)(x)
+            return entry
+
+        x = jnp.zeros((32, 128), jnp.float32)
+        with A.checking():
+            with pytest.raises(A.ContractViolation) as exc:
+                make_entry(kernel_race=True)(x)
+            assert any(f.rule == "krace" for f in exc.value.findings)
+            # budget-only contract: the race is out of scope, and the
+            # working set fits — no violation
+            make_entry(kernel_budget=True)(x)
+
+
+# ---------------------------------------------------------------------------
 # end-to-end: the public entry points are lint-clean
 # ---------------------------------------------------------------------------
 
@@ -388,6 +695,13 @@ class TestEntryPointSweep:
                    "aggregate_tree/median", "aggregate_tree/krum",
                    "compressed_aggregate", "recompile/membership_at",
                    "recompile/fa_weights_masked"])
+        assert report.clean, "\n" + report.render()
+
+    def test_kernel_entries_are_lint_clean(self):
+        """Tier-1 acceptance for the K-rules: every production
+        pallas_call site sweeps clean (trace-only — nothing executes)."""
+        report = run_sweep(sharded="skip", names=["kernels/"])
+        assert len(report.sections) >= 12
         assert report.clean, "\n" + report.render()
 
     @pytest.mark.slow

@@ -18,9 +18,9 @@ from __future__ import annotations
 import json
 import os
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.checkpoint import (checkpoint_meta, latest_step, load_checkpoint,

@@ -12,9 +12,9 @@ materializing a decoded (W, n) stack.
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 try:
@@ -31,7 +31,7 @@ from repro.dist.aggregation import (AggregatorConfig, aggregate_tree,
 from repro.dist.train_step import (TrainConfig, build_train_step,
                                    init_train_state)
 from repro.models.config import ModelConfig
-from repro.optim import sgd, constant
+from repro.optim import constant, sgd
 
 W, B, S, F = 6, 2, 16, 2
 

@@ -32,8 +32,8 @@ import subprocess
 import sys
 from pathlib import Path
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 IN_SUBPROCESS = os.environ.get("REPRO_COORD_STATS_SUBPROCESS") == "1"

@@ -2,14 +2,14 @@
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.core import (FlagConfig, default_m, flag_aggregate, flag_subspace,
-                        flag_aggregate_gram, fa_weights_from_gram, gram_matrix)
-from repro.core import beta_mle
+from repro.core import (FlagConfig, beta_mle, default_m, fa_weights_from_gram,
+                        flag_aggregate, flag_aggregate_gram, flag_subspace,
+                        gram_matrix)
 from tests.conftest import make_gradient_matrix
 
 jax.config.update("jax_enable_x64", False)

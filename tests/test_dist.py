@@ -3,17 +3,17 @@ train steps on every reduced arch (the per-arch smoke tests, deliverable f)."""
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
+from repro.configs import ARCHS, get_config, reduce_for_smoke
 from repro.core import FlagConfig, aggregators
 from repro.dist.aggregation import (AggregatorConfig, aggregate_tree,
-                                    tree_gram, tree_combine)
+                                    tree_combine, tree_gram)
 from repro.dist.train_step import TrainConfig, build_train_step, init_train_state
-from repro.configs import ARCHS, get_config, reduce_for_smoke
-from repro.optim import sgd, adamw, constant
+from repro.optim import adamw, constant, sgd
 
 
 def _tree_of(rng, W):

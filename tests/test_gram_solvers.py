@@ -13,9 +13,9 @@ generators so tolerances stay order-independent (no shared session rng).
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.analysis import Graph, check_shape

@@ -20,7 +20,7 @@ SCRIPT = textwrap.dedent("""
     import json
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from benchmarks.hlo_stats import parse_collectives
+    from repro.analysis.hlo import parse_collectives
 
     mesh = jax.make_mesh((4,), ("model",))
     W_SH = NamedSharding(mesh, P(None, "model"))

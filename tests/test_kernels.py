@@ -7,20 +7,20 @@ locally."""
 
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 pytestmark = pytest.mark.slow
 
+from repro.kernels.coord_stats import ref as cs_ref
+from repro.kernels.coord_stats.kernel import coord_stats_pallas
+from repro.kernels.flash_attn.kernel import flash_attn_pallas
+from repro.kernels.flash_attn.ref import flash_attn_ref
 from repro.kernels.gram.kernel import gram_pallas, tree_gram_pallas
 from repro.kernels.gram.ref import gram_ref, tree_gram_chunk_ref
 from repro.kernels.weighted_sum.kernel import weighted_sum_pallas
 from repro.kernels.weighted_sum.ref import weighted_sum_ref
-from repro.kernels.coord_stats.kernel import coord_stats_pallas
-from repro.kernels.coord_stats import ref as cs_ref
-from repro.kernels.flash_attn.kernel import flash_attn_pallas
-from repro.kernels.flash_attn.ref import flash_attn_ref
 
 TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
        jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}

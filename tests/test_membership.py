@@ -8,13 +8,14 @@ statistical tolerances order-dependent).
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.analysis import assert_no_recompile
 from repro.comm import CommConfig, init_ef
+from repro.configs import get_config, reduce_for_smoke
 from repro.core import FlagConfig
 from repro.core.gram import fa_weights_from_gram, gram_matrix
 from repro.dist.aggregation import (AggregatorConfig, aggregate_tree,
@@ -23,7 +24,6 @@ from repro.dist.membership import (FaultEvent, FaultSchedule,
                                    get_fault_schedule, membership_at)
 from repro.dist.train_step import (TrainConfig, build_train_step,
                                    init_train_state)
-from repro.configs import get_config, reduce_for_smoke
 from repro.optim import constant, sgd
 
 ALL_RULES = ["mean", "flag", "pca", "median", "trimmed_mean", "meamed",

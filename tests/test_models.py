@@ -2,14 +2,13 @@
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.models import transformer
-from repro.models import ssm, rglru as rglru_lib, layers
 from repro.configs import ARCHS, get_config, reduce_for_smoke
+from repro.models import layers, rglru as rglru_lib, ssm, transformer
 
 
 def _rand(rng, shape, dtype=jnp.float32):

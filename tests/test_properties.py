@@ -2,9 +2,9 @@
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -14,8 +14,8 @@ except ImportError:
     # (requirements-test.txt).
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core import (FlagConfig, flag_aggregate, flag_aggregate_gram,
-                        fa_weights_from_gram)
+from repro.core import (FlagConfig, fa_weights_from_gram, flag_aggregate,
+                        flag_aggregate_gram)
 from repro.core.gram import gram_matrix
 from repro.dist.aggregation import AggregatorConfig, aggregate_tree
 

@@ -17,9 +17,9 @@ order-dependent).
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs import get_config, reduce_for_smoke

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCHS, get_config, reduce_for_smoke
-from repro.configs.shapes import SHAPES, input_specs, get_shape
+from repro.configs.shapes import SHAPES, get_shape, input_specs
 
 ASSIGNED = {
     # arch id -> (layers, d_model, heads, kv, d_ff, vocab)

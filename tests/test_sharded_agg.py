@@ -29,13 +29,14 @@ import subprocess
 import sys
 from pathlib import Path
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.analysis import Graph, check_shape
 from repro.comm import CommConfig, init_ef
+from repro.configs import get_config, reduce_for_smoke
 from repro.core import FlagConfig
 from repro.dist.aggregation import (GRAM_RULES, AggregatorConfig,
                                     aggregate_tree, compressed_aggregate,
@@ -45,7 +46,6 @@ from repro.dist.sharded import (coord_axes, n_coord_shards,
 from repro.dist.sharding import use_sharding
 from repro.dist.train_step import (TrainConfig, build_train_step,
                                    init_train_state)
-from repro.configs import get_config, reduce_for_smoke
 from repro.launch.mesh import make_host_mesh
 from repro.optim import constant, sgd
 

@@ -4,16 +4,16 @@ from __future__ import annotations
 
 import tempfile
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.data.synthetic import SyntheticImages, SyntheticLM
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.data import augment
 from repro.data.pipeline import WorkerDataConfig, lm_worker_batches
-from repro.optim import sgd, adamw, step_decay, cosine, warmup_cosine
-from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step
+from repro.data.synthetic import SyntheticImages, SyntheticLM
+from repro.optim import adamw, cosine, sgd, step_decay, warmup_cosine
 
 
 class TestSyntheticImages:

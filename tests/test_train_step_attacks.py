@@ -39,7 +39,7 @@ from repro.dist.aggregation import AggregatorConfig
 from repro.dist.train_step import (TrainConfig, build_train_step,
                                    init_train_state)
 from repro.models.config import ModelConfig
-from repro.optim import sgd, constant
+from repro.optim import constant, sgd
 
 W, B, S, F = 6, 4, 32, 2
 

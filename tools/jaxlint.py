@@ -4,8 +4,10 @@
 Lints every entry point in :mod:`repro.analysis.entrypoints` — all 11
 aggregation rules x {plain, masked, sketch} (x sharded with >= 8
 devices), the gram solver, the compressed bridges, the bf16 serve path,
-the train step, and the recompile harness — and exits nonzero on any
-finding.  This is the gating check of the CI ``lint-contracts`` lane.
+the train step, the recompile harness, and the Pallas kernel block
+(every production ``pallas_call`` under the KTILING / KRACE / KVMEM /
+KPRECISION / KSENTINEL families) — and exits nonzero on any finding.
+This is the gating check of the CI ``lint-contracts`` lane.
 
 Usage:
   PYTHONPATH=src python tools/jaxlint.py [options]
@@ -14,7 +16,15 @@ Options:
   --sharded {auto,force,skip}   mesh variants (default auto: run iff >= 8
                                 devices; the script forces an 8-device
                                 host platform when none is configured)
-  --only SUBSTR [SUBSTR ...]    lint only entries whose name contains any
+  --entry SUBSTR [SUBSTR ...]   lint only entries whose name contains any
+                                (``--only`` is the legacy alias)
+  --rule RULE [RULE ...]        keep only findings from these rule
+                                families (e.g. ``--rule krace kvmem``);
+                                entries still all run — the filter is on
+                                what gates
+  --json PATH                   also write the machine-readable findings
+                                report to PATH (``-`` for stdout); the CI
+                                lane uploads it as an artifact on failure
   --list                        print the entry-point names and exit
   -q / --quiet                  findings only, no per-entry progress
 """
@@ -22,6 +32,7 @@ Options:
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -42,12 +53,22 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--sharded", choices=("auto", "force", "skip"),
                     default="auto")
-    ap.add_argument("--only", nargs="+", default=None, metavar="SUBSTR")
+    ap.add_argument("--entry", "--only", nargs="+", default=None,
+                    metavar="SUBSTR", dest="entry")
+    ap.add_argument("--rule", nargs="+", default=None, metavar="RULE")
+    ap.add_argument("--json", default=None, metavar="PATH")
     ap.add_argument("--list", action="store_true")
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
 
     from repro.analysis.entrypoints import run_sweep, sweep_entries
+    from repro.analysis.findings import Report
+    from repro.analysis.rules import RULES
+
+    if args.rule:
+        unknown = sorted(set(args.rule) - set(RULES))
+        if unknown:
+            ap.error(f"unknown rule(s) {unknown}; known: {sorted(RULES)}")
 
     if args.list:
         for e in sweep_entries(sharded=args.sharded):
@@ -57,8 +78,22 @@ def main(argv=None) -> int:
     progress = None
     if not args.quiet:
         progress = lambda name: print(f"lint {name}", flush=True)
-    report = run_sweep(sharded=args.sharded, names=args.only,
+    report = run_sweep(sharded=args.sharded, names=args.entry,
                        progress=progress)
+    if args.rule:
+        filtered = Report()
+        for name, fs in report.sections:
+            filtered.add(name, [f for f in fs if f.rule in args.rule])
+        report = filtered
+
+    if args.json:
+        payload = json.dumps(report.to_dict(), indent=2)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w") as fh:
+                fh.write(payload + "\n")
+
     print()
     print(report.render())
     return 0 if report.clean else 1
